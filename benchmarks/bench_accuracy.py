@@ -1,0 +1,60 @@
+"""Fig. 8 + Fig. 9 analogues: classification accuracy vs tree scale and
+vs data size, PRF vs RF vs Spark-MLRF-like.
+
+The paper's datasets are UCI/medical; we use synthetic data with the
+same qualitative traits (high dimensionality, sparse signal, label
+noise) so results are exactly reproducible offline.
+"""
+import time
+
+import numpy as np
+
+from repro.core import ForestConfig, train_prf
+from repro.core.baselines import train_mlrf_like, train_rf
+from repro.data.tabular import make_classification, train_test_split
+
+
+def fig8_accuracy_vs_trees(trees=(8, 16, 32, 64), seeds=(0, 1)):
+    x, y = make_classification(
+        n_samples=4000, n_features=600, n_classes=3, n_informative=8,
+        n_redundant=4, label_noise=0.1, class_sep=1.2, seed=7,
+    )
+    xtr, ytr, xte, yte = train_test_split(x, y, 0.25, 0)
+    rows = []
+    for k in trees:
+        cfg = ForestConfig(n_trees=k, max_depth=6, n_bins=16, n_classes=3)
+        for name, fn in [("prf", train_prf), ("rf", train_rf),
+                         ("mlrf", lambda a, b, c, seed: train_mlrf_like(a, b, c, seed, sample_budget=300))]:
+            t0 = time.time()
+            accs = [fn(xtr, ytr, cfg, seed=s).accuracy(xte, yte) for s in seeds]
+            rows.append({
+                "bench": "fig8_accuracy_vs_trees", "algo": name, "n_trees": k,
+                "accuracy": float(np.mean(accs)),
+                "us_per_call": (time.time() - t0) / len(seeds) * 1e6,
+            })
+    return rows
+
+
+def fig9_accuracy_vs_datasize(sizes=(1000, 2000, 4000, 8000), seed=0):
+    rows = []
+    for n in sizes:
+        x, y = make_classification(
+            n_samples=n + 1000, n_features=400, n_classes=3, n_informative=8,
+            label_noise=0.1, class_sep=1.2, seed=11,
+        )
+        xtr, ytr = x[:n], y[:n]
+        xte, yte = x[n:], y[n:]
+        cfg = ForestConfig(n_trees=24, max_depth=6, n_bins=16, n_classes=3)
+        for name, fn in [("prf", train_prf), ("rf", train_rf),
+                         ("mlrf", lambda a, b, c, seed: train_mlrf_like(a, b, c, seed, sample_budget=300))]:
+            t0 = time.time()
+            acc = fn(xtr, ytr, cfg, seed=seed).accuracy(xte, yte)
+            rows.append({
+                "bench": "fig9_accuracy_vs_datasize", "algo": name, "n_samples": n,
+                "accuracy": float(acc), "us_per_call": (time.time() - t0) * 1e6,
+            })
+    return rows
+
+
+def run():
+    return fig8_accuracy_vs_trees() + fig9_accuracy_vs_datasize()

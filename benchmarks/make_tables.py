@@ -1,0 +1,78 @@
+"""Format EXPERIMENTS.md §Dry-run / §Roofline tables from artifacts/dryrun/*.json.
+
+    PYTHONPATH=src python -m benchmarks.make_tables [artifacts/dryrun]
+"""
+import glob
+import json
+import os
+import sys
+
+
+def fmt_s(x):
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x*1e6:.0f}us"
+    if x < 1:
+        return f"{x*1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def load(d):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(d, "*.json"))):
+        rows.append(json.load(open(f)))
+    return rows
+
+
+def dryrun_table(rows):
+    out = ["| arch | shape | mesh | status | compile | HBM/dev | collectives |",
+           "|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] == "OK":
+            colls = " ".join(
+                f"{k}:{int(v['count'])}" for k, v in sorted(r["collectives"].items())
+            )
+            out.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | OK "
+                f"| {r['compile_s']:.0f}s | {r['hbm_per_device_gb']:.2f} GB"
+                f"{'' if r['fits_hbm'] else ' **OVER**'} | {colls} |"
+            )
+        else:
+            out.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['status'].split(':')[0]} | | | |"
+            )
+    return "\n".join(out)
+
+
+def roofline_table(rows, mesh="16x16"):
+    out = [
+        "| arch | shape | compute | memory | collective | dominant | "
+        "useful-FLOPs | roofline frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r.get("mesh") != mesh or r["status"] != "OK":
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(r['compute_s'])} "
+            f"| {fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} "
+            f"| {r['dominant'].replace('_s','')} "
+            f"| {r['useful_flops_ratio']:.3f} | {r['roofline_fraction']:.4f} |"
+        )
+    return "\n".join(out)
+
+
+def main():
+    d = sys.argv[1] if len(sys.argv) > 1 else "artifacts/dryrun"
+    rows = load(d)
+    print("## Dry-run table\n")
+    print(dryrun_table(rows))
+    print("\n## Roofline table (single-pod 16x16)\n")
+    print(roofline_table(rows, "16x16"))
+    print("\n## Roofline table (multi-pod 2x16x16)\n")
+    print(roofline_table(rows, "2x16x16"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Benchmark aggregator — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (plus a JSON dump in
+artifacts/bench.json for EXPERIMENTS.md).
+"""
+import json
+import os
+import sys
+import time
+
+
+def main() -> None:
+    from . import bench_accuracy, bench_comm, bench_kernels, bench_oob, bench_time, bench_volume
+
+    all_rows = []
+    suites = [
+        ("accuracy (Figs. 8-9)", bench_accuracy.run),
+        ("oob (Fig. 10/Table 5)", bench_oob.run),
+        ("volume (Fig. 14)", lambda: bench_volume.run() + bench_volume.run_measured()),
+        ("comm (Fig. 15)", bench_comm.run),
+        ("time/scaling (Figs. 11-13)", bench_time.run),
+        ("kernels", bench_kernels.run),
+    ]
+    print("name,us_per_call,derived")
+    for title, fn in suites:
+        t0 = time.time()
+        try:
+            rows = fn()
+        except Exception as e:  # a suite failure must not hide the others
+            rows = [{"bench": title, "error": str(e)[:200], "us_per_call": 0.0}]
+        for r in rows:
+            name = r.get("bench", title)
+            us = r.get("us_per_call", 0.0)
+            derived = {
+                k: (round(v, 6) if isinstance(v, float) else v)
+                for k, v in r.items() if k not in ("bench", "us_per_call")
+            }
+            print(f"{name},{us:.1f},{json.dumps(derived)}")
+        all_rows.extend(rows)
+        print(f"# suite '{title}' done in {time.time()-t0:.1f}s", file=sys.stderr)
+
+    os.makedirs("artifacts", exist_ok=True)
+    with open("artifacts/bench.json", "w") as f:
+        json.dump(all_rows, f, indent=2, default=str)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""End-to-end LM training driver with checkpoint/restart fault tolerance.
+
+    python examples/lm_pretrain.py --arch smollm-135m --steps 200 --scale 0.25
+
+``--scale 1.0`` trains the full 135M-parameter config (slow on 1 CPU
+core); the default 0.25 width/depth scale (~10M params) runs a few
+hundred steps in minutes and shows the loss dropping. The DSI-table data
+pipeline (paper §4.1.2) feeds batches; checkpoints land in
+``artifacts/lm_ckpt`` and the run RESUMES from the latest one.
+"""
+import argparse
+import dataclasses
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--scale", type=float, default=0.25)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="artifacts/lm_ckpt")
+    ap.add_argument("--save-every", type=int, default=50)
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.checkpoint import CheckpointManager
+    from repro.checkpoint.checkpoint import latest_step
+    from repro.configs import get_config
+    from repro.data.pipeline import TokenPipeline
+    from repro.models import build_model
+    from repro.training import AdamWConfig
+    from repro.training.train_step import init_state, make_train_step
+
+    cfg = get_config(args.arch)
+    if args.scale < 1.0:
+        cfg = dataclasses.replace(
+            cfg,
+            n_layers=max(2, int(cfg.n_layers * args.scale)),
+            d_model=max(64, int(cfg.d_model * args.scale) // 16 * 16),
+            n_heads=max(2, int(cfg.n_heads * args.scale)),
+            n_kv_heads=max(1, int(cfg.n_kv_heads * args.scale)),
+            d_ff=max(128, int(cfg.d_ff * args.scale) // 16 * 16),
+            vocab_size=min(cfg.vocab_size, 8192),
+            compute_dtype="float32",
+        )
+    model = build_model(cfg)
+    n_params = sum(
+        int(np.prod(l.shape))
+        for l in jax.tree_util.tree_leaves(jax.eval_shape(model.init, jax.random.PRNGKey(0)))
+    )
+    print(f"arch={args.arch} scale={args.scale} params={n_params/1e6:.1f}M")
+
+    opt = AdamWConfig(lr=3e-3, warmup_steps=20, decay_steps=max(args.steps, 100))
+    step_fn = jax.jit(make_train_step(model, opt))
+    pipe = TokenPipeline(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                         n_docs=4096, seed=0)
+
+    mgr = CheckpointManager(args.ckpt_dir, keep=2, save_interval=args.save_every)
+    state = init_state(model, jax.random.PRNGKey(0), opt)
+    start = 0
+    if latest_step(args.ckpt_dir) is not None:
+        state, start = mgr.restore_latest(state)
+        print(f"resumed from checkpoint @ step {start}")
+
+    t0 = time.time()
+    for i, b in enumerate(pipe.batches(args.batch, args.steps, n_micro=args.accum)):
+        if i < start:
+            continue
+        state, m = step_fn(state, {k: jnp.asarray(v) for k, v in b.items()})
+        mgr.maybe_save(state, i + 1)
+        if (i + 1) % 10 == 0 or i == start:
+            dt = (time.time() - t0) / max(i + 1 - start, 1)
+            print(f"step {i+1:4d}  loss={float(m['loss']):.4f} "
+                  f"gnorm={float(m['grad_norm']):.3f} lr={float(m['lr']):.2e} "
+                  f"({dt:.2f}s/step)")
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Batched serving demo: prefill a prompt batch, decode greedily.
+
+    python examples/serve_lm.py --arch smollm-135m --batch 4 --prompt-len 32 --gen 16
+
+Uses the same prefill/decode paths the dry-run lowers at 32k/500k scale
+(rolling window caches for local-attention archs, SSM states for mamba).
+"""
+import argparse
+import dataclasses
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.serving.serve_step import greedy_generate
+
+    cfg = dataclasses.replace(
+        get_config(args.arch),
+        n_layers=4, d_model=256, n_heads=4, n_kv_heads=2, d_ff=512,
+        vocab_size=4096, head_dim=64, compute_dtype="float32",
+        local_window=16 if get_config(args.arch).local_window else 0,
+        ssm_state=16 if get_config(args.arch).ssm_state else 0,
+    )
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)), jnp.int32
+    )
+    s_max = args.prompt_len + args.gen + 1
+
+    t0 = time.time()
+    out = greedy_generate(model, params, prompts, steps=args.gen, s_max=s_max)
+    dt = time.time() - t0
+    toks = args.batch * args.gen
+    print(f"arch={args.arch} batch={args.batch} prompt={args.prompt_len} "
+          f"gen={args.gen}")
+    print(f"generated {toks} tokens in {dt:.2f}s "
+          f"({toks/dt:.1f} tok/s incl. compile)")
+    print("sample continuations (token ids):")
+    for b in range(min(args.batch, 2)):
+        print(f"  [{b}]", np.asarray(out[b]).tolist())
+
+
+if __name__ == "__main__":
+    main()

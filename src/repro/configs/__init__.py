@@ -1,0 +1,1 @@
+from .base import ArchConfig, SHAPES, all_configs, get_config, register  # noqa: F401

@@ -1,0 +1,9 @@
+"""PRF — the paper's contribution: Parallel Random Forest in JAX.
+
+Public surface:
+  ForestConfig, Forest            core/types.py
+  train_prf, PRFModel             core/api.py
+  train_prf_distributed           core/distributed.py (mesh-sharded)
+"""
+from .types import Forest, ForestConfig  # noqa: F401
+from .api import PRFModel, train_prf  # noqa: F401

@@ -1,0 +1,81 @@
+"""Public PRF API — train / predict, paper-faithful pipeline.
+
+    bin -> DSI bootstrap -> dimension reduction (Alg. 3.1)
+        -> level-synchronous growth (Alg. 4.2) -> OOB weights (Eq. 8)
+
+``train_prf`` is the single-host path; ``repro.core.distributed`` offers
+the mesh-sharded version with identical semantics.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .binning import bin_dataset, apply_bins
+from .dimred import dimension_reduction, random_feature_mask
+from .dsi import bootstrap_counts
+from .forest import grow_forest
+from .types import Forest, ForestConfig
+from .voting import oob_accuracy, oob_r2, predict, predict_regression
+
+
+@dataclasses.dataclass
+class PRFModel:
+    """Trained model + the binning transform needed at inference."""
+
+    forest: Forest
+    bin_edges: np.ndarray
+
+    def predict(self, x: np.ndarray) -> np.ndarray:
+        xb = apply_bins(jnp.asarray(x), jnp.asarray(self.bin_edges))
+        if self.forest.config.regression:
+            return np.asarray(predict_regression(self.forest, xb))
+        return np.asarray(predict(self.forest, xb))
+
+    def accuracy(self, x: np.ndarray, y: np.ndarray) -> float:
+        return float(np.mean(self.predict(x) == np.asarray(y)))
+
+
+def train_prf(
+    x: np.ndarray,
+    y: np.ndarray,
+    config: ForestConfig,
+    seed: int = 0,
+) -> PRFModel:
+    """End-to-end PRF training on host data (paper §3 + §4 semantics)."""
+    config = config.resolved(x.shape[1])
+    xb_np, edges = bin_dataset(x, config.n_bins)
+    xb = jnp.asarray(xb_np)
+    y = jnp.asarray(y)
+    key = jax.random.PRNGKey(seed)
+    k_boot, k_dim = jax.random.split(key)
+
+    weights = bootstrap_counts(k_boot, config.n_trees, x.shape[0])     # DSI §4.1.2
+
+    feature_mask = None
+    if config.feature_mode == "importance" and not config.regression:
+        feature_mask = dimension_reduction(xb, y, weights, config, k_dim)  # §3.2
+    elif config.feature_mode == "random":
+        feature_mask = random_feature_mask(
+            k_dim, n_trees=config.n_trees, n_features=x.shape[1],
+            n_selected=config.n_selected,
+        )                                                              # §3.1 RF
+
+    forest = grow_forest(
+        xb, y if not config.regression else y.astype(jnp.float32),
+        weights, config, feature_mask
+    )                                                                  # §4.2
+
+    if config.weighted_voting:                                         # §3.3
+        w = (
+            oob_r2(forest, xb, y.astype(jnp.float32), weights)
+            if config.regression
+            else oob_accuracy(forest, xb, y, weights)
+        )
+        forest = dataclasses.replace(forest, tree_weight=w)
+
+    return PRFModel(forest=forest, bin_edges=edges)

@@ -1,0 +1,93 @@
+"""The paper's comparison algorithms (§5): original RF and Spark-MLRF-like.
+
+* ``train_rf``       — Breiman RF as the paper describes it (§3.1): per-tree
+  bootstrap with *copied* sampled data (volume k*N*M), m features selected
+  uniformly per tree, unweighted majority voting.
+* ``train_mlrf_like`` — Spark MLlib RF's accuracy-relevant deviation: split
+  candidates come from a *sampled subset* of the data (MLlib samples each
+  partition to pick split thresholds). We emulate it by fitting bin edges
+  on a fixed ``sample_budget`` subsample — as N grows with a fixed budget,
+  quantile quality drops and accuracy decays, reproducing the paper's
+  Fig. 9 observation ("the ratio of the random selection increases, and
+  the accuracy of Spark-MLRF decreases inevitably").
+
+Both reuse the PRF growth engine (the tree math is identical — the paper's
+algorithms differ in sampling, feature selection, voting and data motion,
+not in the split criterion).
+
+``data_volume_bytes`` implements the §4.3.2 volume model for Fig. 14.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .api import PRFModel, train_prf
+from .binning import fit_bins, apply_bins
+from .dsi import bootstrap_counts
+from .dimred import random_feature_mask
+from .forest import grow_forest
+from .types import ForestConfig
+
+
+def train_rf(x: np.ndarray, y: np.ndarray, config: ForestConfig, seed: int = 0) -> PRFModel:
+    """Original RF baseline: random per-tree features, plain majority vote."""
+    cfg = dataclasses.replace(
+        config, feature_mode="random", weighted_voting=False
+    )
+    return train_prf(x, y, cfg, seed=seed)
+
+
+def train_mlrf_like(
+    x: np.ndarray,
+    y: np.ndarray,
+    config: ForestConfig,
+    seed: int = 0,
+    sample_budget: int = 2000,
+) -> PRFModel:
+    """Spark-MLRF-style: split thresholds from a bounded random subsample."""
+    cfg = dataclasses.replace(
+        config, feature_mode="random", weighted_voting=False
+    ).resolved(x.shape[1])
+    rng = np.random.default_rng(seed)
+    n = x.shape[0]
+    idx = rng.choice(n, size=min(sample_budget, n), replace=False)
+    edges = fit_bins(x[idx], cfg.n_bins)             # <- sampled split candidates
+    xb = apply_bins(jnp.asarray(x), jnp.asarray(edges))
+
+    key = jax.random.PRNGKey(seed)
+    k_boot, k_feat = jax.random.split(key)
+    weights = bootstrap_counts(k_boot, cfg.n_trees, n)
+    mask = random_feature_mask(
+        k_feat, n_trees=cfg.n_trees, n_features=x.shape[1], n_selected=cfg.n_selected
+    )
+    forest = grow_forest(xb, jnp.asarray(y), weights, cfg, mask)
+    return PRFModel(forest=forest, bin_edges=edges)
+
+
+# ---------------------------------------------------------------------------
+# Analytical data-volume model (paper §4.3.2 / Fig. 14)
+# ---------------------------------------------------------------------------
+
+
+def data_volume_bytes(
+    algorithm: str, n_samples: int, n_features: int, n_trees: int,
+    value_bytes: int = 8,
+) -> int:
+    """Training-set volume each algorithm materializes.
+
+    paper: RF & Spark-MLRF sample *copies* -> N*M*k; PRF keeps one vertical
+    copy + DSI -> ~2*N*M flat in k. Our TPU PRF goes further: one binned
+    copy (N*M uint8) + k*N float32 in-bag counts.
+    """
+    N, M, k = n_samples, n_features, n_trees
+    if algorithm in ("rf", "spark-mlrf"):
+        return N * M * k * value_bytes
+    if algorithm == "prf-paper":                     # vertical FS_j = <idx, y_j, y_target>
+        return 2 * N * M * value_bytes
+    if algorithm == "prf-tpu":                       # binned matrix + DSI counts
+        return N * M * 1 + k * N * 4
+    raise ValueError(algorithm)

@@ -1,0 +1,63 @@
+"""Quantile binning — the TPU-native form of the paper's split-point search.
+
+The Spark implementation evaluates candidate splits on raw feature values
+(C4.5); Spark-MLRF approximates them by *sampling each partition* (the
+paper criticizes exactly this for losing accuracy). We instead compute
+**global quantile bin edges once** and train on ``uint8`` bin ids:
+
+* split finding becomes dense histogram math (MXU/VPU friendly);
+* every feature costs the same number of bytes -> the paper's
+  "static data allocation" balancing problem (§4.1.3, Fig. 5) disappears;
+* accuracy loss is bounded by bin resolution (validated in tests), unlike
+  per-partition sampling whose error grows with data size (paper §5.2.2).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def fit_bins(x: np.ndarray, n_bins: int = 64) -> np.ndarray:
+    """Compute per-feature quantile bin edges.
+
+    Args:
+      x: [N, F] float array (host / numpy — binning is a one-shot
+         preprocessing pass, exactly like the paper's vertical-partition
+         ETL step).
+      n_bins: number of bins B; edges has B-1 interior boundaries.
+
+    Returns:
+      edges: [F, B-1] float64, ascending per feature.
+    """
+    x = np.asarray(x)
+    qs = np.linspace(0.0, 1.0, n_bins + 1)[1:-1]
+    edges = np.quantile(x, qs, axis=0).T  # [F, B-1]
+    # Guarantee monotonicity even for degenerate (constant) features.
+    edges = np.maximum.accumulate(edges, axis=1)
+    return edges
+
+
+@partial(jax.jit, static_argnames=())
+def apply_bins(x: jnp.ndarray, edges: jnp.ndarray) -> jnp.ndarray:
+    """Digitize features into uint8 bin ids.
+
+    Args:
+      x: [N, F] floats.  edges: [F, B-1].
+    Returns:
+      [N, F] uint8 bin ids in [0, B-1].
+    """
+    # vmap searchsorted over the feature axis.
+    def _one(col, e):
+        return jnp.searchsorted(e, col, side="right")
+
+    bins = jax.vmap(_one, in_axes=(1, 0), out_axes=1)(x, edges)
+    return bins.astype(jnp.uint8)
+
+
+def bin_dataset(x: np.ndarray, n_bins: int = 64):
+    """Convenience: fit + apply. Returns (binned [N,F] uint8, edges)."""
+    edges = fit_bins(x, n_bins)
+    return np.asarray(apply_bins(jnp.asarray(x), jnp.asarray(edges))), edges

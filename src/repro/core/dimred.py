@@ -1,0 +1,84 @@
+"""Dimension reduction in the training process (paper §3.2, Alg. 3.1).
+
+Per tree (training subset S_i):
+  1. gain ratio GR(y_ij) of every feature on the bootstrap sample (Eq. 2-6,
+     multiway/faithful form over the feature's value set);
+  2. variable importance VI = GR / sum(GR) (Eq. 7);
+  3. keep the top ``k_imp`` features deterministically;
+  4. draw ``m - k_imp`` more uniformly from the remaining ``M - k_imp``.
+
+The result is a boolean feature mask per tree; growth never considers
+masked features, reducing the effective dimensionality M -> m while
+keeping the top-importance features always in play (the paper's balance
+of "accuracy and diversity").
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .gain import multiway_gain_ratio, variable_importance
+from .histograms import class_channels, level_histograms
+from .types import ForestConfig
+
+
+def root_gain_ratios(
+    x_binned: jnp.ndarray, y: jnp.ndarray, weights: jnp.ndarray, config: ForestConfig
+) -> jnp.ndarray:
+    """GR(y_ij) of every feature on every tree's bootstrap sample. [k, F]."""
+    k, N = weights.shape
+    base = class_channels(y, config.n_classes)
+    slot0 = jnp.zeros((k, N), jnp.int32)
+    hist = level_histograms(
+        x_binned, base, weights, slot0, n_slots=1, n_bins=config.n_bins
+    )                                                    # [k, 1, F, B, C]
+    return multiway_gain_ratio(hist[:, 0])               # [k, F]
+
+
+@partial(jax.jit, static_argnames=("n_selected", "n_important"))
+def select_features(
+    gr: jnp.ndarray, rng: jax.Array, *, n_selected: int, n_important: int
+) -> jnp.ndarray:
+    """Alg. 3.1 steps 10-19: top-k_imp by VI + uniform (m - k_imp) of the rest.
+
+    Args:  gr [k, F].  Returns: mask [k, F] bool with exactly m True per tree.
+    """
+    k, F = gr.shape
+    vi = variable_importance(gr)                          # Eq. (7)
+    # Deterministic top-k_imp: rank by VI (desc).
+    vi_rank = jnp.argsort(jnp.argsort(-vi, axis=-1), axis=-1)   # rank of each feature
+    top_mask = vi_rank < n_important
+
+    # Uniform (m - k_imp) of the remainder: random keys, masked ranking.
+    u = jax.random.uniform(rng, (k, F))
+    u = jnp.where(top_mask, -jnp.inf, u)                  # exclude the top features
+    u_rank = jnp.argsort(jnp.argsort(-u, axis=-1), axis=-1)
+    rest_mask = u_rank < (n_selected - n_important)
+    return top_mask | rest_mask
+
+
+@partial(jax.jit, static_argnames=("n_trees", "n_features", "n_selected"))
+def random_feature_mask(
+    rng: jax.Array, *, n_trees: int, n_features: int, n_selected: int
+) -> jnp.ndarray:
+    """Breiman-RF feature selection (paper §3.1 step 2): m uniform per tree."""
+    u = jax.random.uniform(rng, (n_trees, n_features))
+    rank = jnp.argsort(jnp.argsort(-u, axis=-1), axis=-1)
+    return rank < n_selected
+
+
+def dimension_reduction(
+    x_binned: jnp.ndarray,
+    y: jnp.ndarray,
+    weights: jnp.ndarray,
+    config: ForestConfig,
+    rng: jax.Array,
+) -> jnp.ndarray:
+    """Full Alg. 3.1. Returns per-tree feature mask [k, F]."""
+    cfg = config.resolved(x_binned.shape[1])
+    gr = root_gain_ratios(x_binned, y, weights, cfg)
+    return select_features(
+        gr, rng, n_selected=cfg.n_selected, n_important=cfg.n_important
+    )

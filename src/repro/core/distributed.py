@@ -1,0 +1,391 @@
+"""Distributed PRF — vertical data-partitioning on a device mesh (paper §4).
+
+Sharding layout (the paper's data-parallel optimization, §4.1):
+
+  x_binned [N, F] : P(sample_axes, feature_axis)   <- vertical partitioning:
+                    features pinned to `model` shards, samples to `data`
+  y        [N]    : P(sample_axes)
+  weights  [k, N] : P(None, sample_axes)           <- DSI counts, §4.1.2
+  forest          : replicated (small)
+
+Communication structure (== the paper's task DAG, §4.2):
+
+  T_GR   per-device histograms over its (sample x feature) block, then one
+         ``psum`` over the sample axes — the *only* large collective.
+         Features never move; gain-ratio math is local to feature shards
+         (paper: "tasks dispatched to the slaves where the subset is
+         located", LocalScheduler).
+  T_NS   winner selection across feature shards: an ``all_gather`` of the
+         [k, S] per-shard best gain ratios + masked ``psum``s of the tiny
+         winner descriptors and the per-sample go-left/right bits
+         (paper: ClusterScheduler synchronization point).
+
+Bootstrap is *stratified per sample-shard* (each shard draws N_local of
+its own N_local rows): the Spark implementation samples globally; the
+stratified variant has identical marginal statistics, lower variance, and
+needs no cross-shard index exchange. Noted as an adaptation in DESIGN.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .dsi import bootstrap_counts
+from .forest import _rank_splits, chunked_level_scores, init_forest
+from .gain import SplitScores, multiway_gain_ratio
+from .histograms import class_channels, level_histograms, regression_channels
+from .types import Forest, ForestConfig
+
+
+def _multi_axis_index(axes: Sequence[str]) -> jnp.ndarray:
+    """Linearized index over possibly-multiple mesh axes (row-major)."""
+    idx = jnp.int32(0)
+    for a in axes:
+        idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+    return idx
+
+
+def _masked_psum(val, mine, axis):
+    """Select `val` from the shard where `mine` is True; result on all shards."""
+    return jax.lax.psum(jnp.where(mine, val, jnp.zeros_like(val)), axis)
+
+
+def _global_best_splits(
+    scores: SplitScores, n_node, axes, f_global_local: jnp.ndarray
+):
+    """T_NS across shards: gather per-shard leaders, pick the winner.
+
+    ``axes``: mesh axes the candidate splits are sharded over — just the
+    feature axis in the paper-faithful layout, or (data, feature) when
+    the histogram combine is a reduce-scatter (§Perf).
+    ``f_global_local``: this shard's features mapped to global ids.
+    """
+    axes = tuple(axes)
+    my = _multi_axis_index(axes)
+    gr_all = jax.lax.all_gather(scores.gain_ratio, axes)            # [P, k, S]
+    win = jnp.argmax(gr_all, axis=0)                                # [k, S]
+    best_gr = jnp.max(gr_all, axis=0)
+    mine = win == my
+    f_global = _masked_psum(f_global_local, mine, axes)
+    thr = _masked_psum(scores.threshold, mine, axes)
+    lcnt = _masked_psum(scores.left_counts, mine[..., None], axes)
+    rcnt = _masked_psum(scores.right_counts, mine[..., None], axes)
+    n_node = _masked_psum(n_node, mine, axes)
+    return SplitScores(best_gr, f_global, thr, lcnt, rcnt), n_node, mine
+
+
+def _grow_sharded(
+    xb_loc, base_loc, w_loc, mask_loc, config: ForestConfig,
+    *, sample_axes, feature_axis,
+):
+    """Level-synchronous growth on one device's (sample x feature) block."""
+    Nl, Fl = xb_loc.shape
+    k, S = config.n_trees, config.frontier
+    n_max = config.max_splits_per_level
+    depth = config.max_depth
+    pad = config.max_nodes
+    midx = jax.lax.axis_index(feature_axis)
+
+    forest = init_forest(config)
+    root_counts = jax.lax.psum(
+        jnp.einsum("kn,nc->kc", w_loc, base_loc), sample_axes
+    )
+    forest = dataclasses.replace(
+        forest, class_counts=forest.class_counts.at[:, 0].set(root_counts)
+    )
+    if config.regression:
+        forest = dataclasses.replace(
+            forest,
+            value=forest.value.at[:, 0].set(
+                root_counts[:, 1] / jnp.maximum(root_counts[:, 0], 1e-38)
+            ),
+        )
+
+    slot_node = jnp.full((k, S), -1, jnp.int32).at[:, 0].set(0)
+    sample_slot = jnp.zeros((k, Nl), jnp.int32)
+    t_idx = jnp.arange(k)[:, None]
+
+    # T_GR combine strategy: plain psum (paper-faithful: every sample
+    # shard ends with the full feature-shard histogram) or reduce-scatter
+    # (§Perf: histogram shards over (sample x feature) — half the wire
+    # bytes, 1/P_data of the redundant gain-ratio compute).
+    use_rs = (
+        config.hist_reduce == "psum_scatter"
+        and len(sample_axes) == 1
+        and Fl % jax.lax.axis_size(sample_axes[0]) == 0
+    )
+    midx = jax.lax.axis_index(feature_axis)
+
+    def level_step(carry, level):
+        forest, slot_node, sample_slot = carry
+
+        if use_rs:
+            def reduce_fn(h):  # h [tc, S, Fl, B, C] -> scatter Fl over data
+                return jax.lax.psum_scatter(
+                    h, sample_axes[0], scatter_dimension=2, tiled=True
+                )
+
+            didx = jax.lax.axis_index(sample_axes[0])
+            d_size = jax.lax.axis_size(sample_axes[0])
+            fl_sub = Fl // d_size
+            mask_src = (
+                mask_loc if mask_loc is not None
+                else jnp.ones((config.n_trees, Fl), jnp.bool_)
+            )
+            mask_rs = jax.lax.dynamic_slice_in_dim(
+                mask_src, didx * fl_sub, fl_sub, 1
+            )
+            scores_loc, n_node_loc = chunked_level_scores(
+                xb_loc, base_loc, w_loc, sample_slot, mask_rs, config,
+                hist_reduce=reduce_fn,
+            )
+            f_glob = scores_loc.feature + midx * Fl + didx * fl_sub
+            scores, n_node, _ = _global_best_splits(
+                scores_loc, n_node_loc, (sample_axes[0], feature_axis), f_glob
+            )
+        else:
+            scores_loc, n_node_loc = chunked_level_scores(
+                xb_loc, base_loc, w_loc, sample_slot, mask_loc, config,
+                hist_reduce=lambda h: jax.lax.psum(h, sample_axes),
+            )
+            scores, n_node, _ = _global_best_splits(
+                scores_loc, n_node_loc, (feature_axis,),
+                scores_loc.feature + midx * Fl,
+            )
+
+        active = slot_node >= 0
+        valid = (
+            active
+            & (scores.gain_ratio > config.min_gain)
+            & (n_node >= config.min_samples_split)
+        )
+        split_rank = _rank_splits(scores.gain_ratio, valid, n_max)
+        is_split = split_rank >= 0
+
+        child_base = 1 + 2 * n_max * level
+        left_id = child_base + 2 * split_rank
+        node_or_pad = jnp.where(is_split, slot_node, pad)
+
+        feature = forest.feature.at[t_idx, node_or_pad].set(
+            jnp.where(is_split, scores.feature, -1)
+        )
+        threshold = forest.threshold.at[t_idx, node_or_pad].set(scores.threshold)
+        left_child = forest.left_child.at[t_idx, node_or_pad].set(left_id)
+        lid = jnp.where(is_split, left_id, pad)
+        rid = jnp.where(is_split, left_id + 1, pad)
+        class_counts = forest.class_counts.at[t_idx, lid].set(scores.left_counts)
+        class_counts = class_counts.at[t_idx, rid].set(scores.right_counts)
+        if config.regression:
+            lval = scores.left_counts[..., 1] / jnp.maximum(scores.left_counts[..., 0], 1e-38)
+            rval = scores.right_counts[..., 1] / jnp.maximum(scores.right_counts[..., 0], 1e-38)
+            value = forest.value.at[t_idx, lid].set(lval).at[t_idx, rid].set(rval)
+        else:
+            value = forest.value
+        forest = dataclasses.replace(
+            forest, feature=feature, threshold=threshold,
+            left_child=left_child, class_counts=class_counts, value=value,
+        )
+
+        # Route local samples: the winning feature lives on exactly one
+        # feature shard; it computes the go-right bit, a masked psum
+        # broadcasts it (the paper's "result distributed to all slaves").
+        live = sample_slot >= 0
+        s_safe = jnp.where(live, sample_slot, 0)
+        rank_i = jnp.take_along_axis(split_rank, s_safe, 1)          # [k, Nl]
+        f_i = jnp.take_along_axis(scores.feature, s_safe, 1)         # global ids
+        thr_i = jnp.take_along_axis(scores.threshold, s_safe, 1)
+        f_shard = f_i // Fl
+        f_here = jnp.where(f_shard == midx, f_i - midx * Fl, 0)
+        bins_i = jax.vmap(
+            lambda fr: jnp.take_along_axis(
+                xb_loc.astype(jnp.int32), fr[:, None], axis=1
+            )[:, 0]
+        )(f_here)
+        go_loc = jnp.where(f_shard == midx, (bins_i > thr_i).astype(jnp.int32), 0)
+        go_right = jax.lax.psum(go_loc, feature_axis)                # [k, Nl]
+        new_slot = jnp.where(live & (rank_i >= 0), 2 * rank_i + go_right, -1)
+
+        j = jnp.arange(S)[None, :]
+        n_children = 2 * is_split.sum(-1, keepdims=True)
+        new_slot_node = jnp.where(j < n_children, child_base + j, -1).astype(jnp.int32)
+        return (forest, new_slot_node, new_slot), None
+
+    (forest, _, _), _ = jax.lax.scan(
+        level_step, (forest, slot_node, sample_slot), jnp.arange(depth)
+    )
+    return forest
+
+
+def _route_sharded(forest: Forest, xb_loc, *, feature_axis: str):
+    """route_to_leaves when features are sharded over `feature_axis`."""
+    k = forest.feature.shape[0]
+    Nl, Fl = xb_loc.shape
+    depth = forest.config.max_depth
+    midx = jax.lax.axis_index(feature_axis)
+    xb = xb_loc.astype(jnp.int32)
+
+    def step(node, _):
+        f = jnp.take_along_axis(forest.feature, node, 1)             # [k, Nl]
+        leaf = f < 0
+        f_shard = jnp.where(leaf, -1, f // Fl)
+        f_here = jnp.where(f_shard == midx, f - midx * Fl, 0)
+        b = jax.vmap(
+            lambda fr: jnp.take_along_axis(xb, fr[:, None], 1)[:, 0]
+        )(f_here)
+        thr = jnp.take_along_axis(forest.threshold, node, 1)
+        go_loc = jnp.where(f_shard == midx, (b > thr).astype(jnp.int32), 0)
+        go = jax.lax.psum(go_loc, feature_axis)
+        lc = jnp.take_along_axis(forest.left_child, node, 1)
+        return jnp.where(leaf, node, lc + go), None
+
+    node0 = jnp.zeros((k, Nl), jnp.int32)
+    leaves, _ = jax.lax.scan(step, node0, None, length=depth)
+    return leaves
+
+
+def _dimred_sharded(xb_loc, base_loc, w_loc, config, key, *, sample_axes, feature_axis):
+    """Distributed Alg. 3.1: local GR + global VI ranking."""
+    k, Nl = w_loc.shape
+    Fl = xb_loc.shape[1]
+    slot0 = jnp.zeros((k, Nl), jnp.int32)
+    hist = level_histograms(
+        xb_loc, base_loc, w_loc, slot0, n_slots=1, n_bins=config.n_bins
+    )
+    hist = jax.lax.psum(hist, sample_axes)
+    gr_loc = multiway_gain_ratio(hist[:, 0])                         # [k, Fl]
+    gr = jax.lax.all_gather(gr_loc, feature_axis, axis=1, tiled=True)  # [k, F]
+    from .dimred import select_features
+
+    cfg = config.resolved(gr.shape[1])
+    mask = select_features(
+        gr, key, n_selected=cfg.n_selected, n_important=cfg.n_important
+    )
+    midx = jax.lax.axis_index(feature_axis)
+    return jax.lax.dynamic_slice_in_dim(mask, midx * Fl, Fl, axis=1)
+
+
+def _oob_weights_sharded(forest, xb_loc, y_loc, w_loc, *, sample_axes, feature_axis):
+    """Eq. (8) with samples and features sharded."""
+    leaves = _route_sharded(forest, xb_loc, feature_axis=feature_axis)
+    counts = jnp.take_along_axis(forest.class_counts, leaves[..., None], axis=1)
+    pred = jnp.argmax(counts, axis=-1)                               # [k, Nl]
+    oob = (w_loc == 0.0).astype(jnp.float32)
+    correct = jax.lax.psum(
+        jnp.sum(oob * (pred == y_loc[None]).astype(jnp.float32), 1), sample_axes
+    )
+    total = jax.lax.psum(jnp.sum(oob, 1), sample_axes)
+    return jnp.where(total > 0, correct / jnp.maximum(total, 1.0), 0.5)
+
+
+def make_prf_train_fn(
+    config: ForestConfig,
+    mesh: Mesh,
+    *,
+    sample_axes: Sequence[str] = ("data",),
+    feature_axis: str = "model",
+):
+    """Build the jit'd distributed PRF trainer for `mesh`.
+
+    Returns (train_fn, in_shardings): ``train_fn(x_binned, y, seed_key)``
+    -> Forest (replicated). This is the function the multi-pod dry-run
+    lowers and compiles.
+    """
+    sample_axes = tuple(sample_axes)
+    x_spec = P(sample_axes, feature_axis)
+    y_spec = P(sample_axes)
+
+    def train(x_binned, y, key):
+        def kernel(xb_loc, y_loc, key):
+            k_boot, k_dim = jax.random.split(
+                jax.random.fold_in(key, _multi_axis_index(sample_axes))
+            )
+            Nl = xb_loc.shape[0]
+            base_loc = (
+                regression_channels(y_loc)
+                if config.regression
+                else class_channels(y_loc, config.n_classes)
+            )
+            # Stratified DSI bootstrap (see module docstring).
+            w_loc = bootstrap_counts(k_boot, config.n_trees, Nl)
+
+            mask_loc = None
+            if config.feature_mode == "importance" and not config.regression:
+                # identical key across shards => identical global mask
+                k_dim_g = jax.random.fold_in(key, 7)
+                mask_loc = _dimred_sharded(
+                    xb_loc, base_loc, w_loc, config, k_dim_g,
+                    sample_axes=sample_axes, feature_axis=feature_axis,
+                )
+            elif config.feature_mode == "random":
+                from .dimred import random_feature_mask
+
+                cfg = config.resolved(x_binned.shape[1])
+                mask = random_feature_mask(
+                    jax.random.fold_in(key, 7),
+                    n_trees=config.n_trees,
+                    n_features=x_binned.shape[1],
+                    n_selected=cfg.n_selected,
+                )
+                midx = jax.lax.axis_index(feature_axis)
+                Fl = xb_loc.shape[1]
+                mask_loc = jax.lax.dynamic_slice_in_dim(mask, midx * Fl, Fl, 1)
+
+            forest = _grow_sharded(
+                xb_loc, base_loc, w_loc, mask_loc, config,
+                sample_axes=sample_axes, feature_axis=feature_axis,
+            )
+            if config.weighted_voting and not config.regression:
+                w = _oob_weights_sharded(
+                    forest, xb_loc, y_loc, w_loc,
+                    sample_axes=sample_axes, feature_axis=feature_axis,
+                )
+                forest = dataclasses.replace(forest, tree_weight=w)
+            return forest
+
+        return jax.shard_map(
+            kernel,
+            mesh=mesh,
+            in_specs=(x_spec, y_spec, P()),
+            out_specs=P(),
+            check_vma=False,
+        )(x_binned, y, key)
+
+    in_shardings = (
+        NamedSharding(mesh, x_spec),
+        NamedSharding(mesh, y_spec),
+        NamedSharding(mesh, P()),
+    )
+    return jax.jit(train, in_shardings=in_shardings), in_shardings
+
+
+def predict_sharded(forest: Forest, x_binned, mesh, *,
+                    sample_axes=("data",), feature_axis="model"):
+    """Distributed weighted-voting prediction (Eq. 10). Returns [N] labels."""
+    sample_axes = tuple(sample_axes)
+
+    def kernel(xb_loc):
+        leaves = _route_sharded(forest, xb_loc, feature_axis=feature_axis)
+        counts = jnp.take_along_axis(forest.class_counts, leaves[..., None], axis=1)
+        probs = counts / jnp.maximum(counts.sum(-1, keepdims=True), 1e-38)
+        w = (
+            forest.tree_weight
+            if forest.config.weighted_voting
+            else jnp.ones_like(forest.tree_weight)
+        )
+        from .voting import weighted_vote
+
+        scores = weighted_vote(probs, w, soft=forest.config.soft_voting)
+        return jnp.argmax(scores, -1)
+
+    fn = jax.shard_map(
+        kernel, mesh=mesh,
+        in_specs=(P(sample_axes, feature_axis),),
+        out_specs=P(sample_axes),
+        check_vma=False,
+    )
+    return jax.jit(fn)(x_binned)

@@ -1,0 +1,269 @@
+"""Level-synchronous PRF training & prediction (paper Alg. 4.2, TPU-native).
+
+The paper's task DAG (Fig. 6) maps onto arrays:
+
+* DAG stage  -> one iteration of a ``lax.scan`` over tree depth;
+* T_GR tasks -> the [k trees x S frontier slots x F features] histogram +
+                gain-ratio tensor computed in one fused step (dual
+                parallelism of §4.2.1: trees AND features concurrently);
+* T_NS tasks -> the argmax over (feature, threshold) + child allocation.
+
+Trees live in a flat node pool; level L allocates children inside band
+``[1 + 2*S*L, 1 + 2*S*(L+1))`` so allocation is pure index math. A beam
+limit (``max_frontier``) turns growth into LightGBM-style best-first
+expansion and bounds histogram memory at any scale; ``tree_chunk`` bounds
+it in the ensemble direction (trees processed in chunks per level — the
+paper's "tasks of different trees dispatched in groups").
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .gain import SplitScores, level_scores
+from .histograms import class_channels, level_histograms, regression_channels
+from .types import Forest, ForestConfig
+
+
+def init_forest(config: ForestConfig) -> Forest:
+    k, P = config.n_trees, config.max_nodes + 1  # +1 pad slot
+    C = 3 if config.regression else config.n_classes
+    return Forest(
+        feature=jnp.full((k, P), -1, jnp.int32),
+        threshold=jnp.zeros((k, P), jnp.int32),
+        left_child=jnp.full((k, P), -1, jnp.int32),
+        class_counts=jnp.zeros((k, P, C), jnp.float32),
+        value=jnp.zeros((k, P), jnp.float32),
+        tree_weight=jnp.ones((k,), jnp.float32),
+        config=config,
+    )
+
+
+def _rank_splits(gain: jnp.ndarray, valid: jnp.ndarray, n_max: int) -> jnp.ndarray:
+    """Beam selection: rank valid slots by gain, admit top n_max.
+
+    Returns split_rank [k, S] int32 in [0, n_max) for admitted slots, -1 else.
+    """
+    score = jnp.where(valid, gain, -jnp.inf)
+    order = jnp.argsort(-score, axis=-1)
+    pos = jnp.argsort(order, axis=-1).astype(jnp.int32)        # rank of each slot
+    admitted = valid & (pos < n_max)
+    return jnp.where(admitted, pos, -1)
+
+
+def chunked_level_scores(
+    x_binned: jnp.ndarray,       # [N, F] uint8 (local shard in distributed mode)
+    base_channels: jnp.ndarray,  # [N, C]
+    weights: jnp.ndarray,        # [k, N]
+    sample_slot: jnp.ndarray,    # [k, N]
+    feature_mask: Optional[jnp.ndarray],  # [k, F] bool or None
+    config: ForestConfig,
+    *,
+    hist_reduce=None,            # optional fn(hist) -> hist (e.g. psum over 'data')
+):
+    """T_GR + T_NS-stage-1 for all k trees, chunked over the tree axis.
+
+    The histogram tensor only ever exists for ``tree_chunk`` trees at a
+    time; only the O(k*S) split descriptors survive the chunk loop.
+    Returns (SplitScores [k, S, ...], n_node [k, S]).
+    """
+    k = config.n_trees
+    S = config.frontier
+    tc = config.tree_chunk if config.tree_chunk > 0 else k
+    tc = min(tc, k)
+
+    packed = config.packed_hist and not config.regression
+
+    def score_chunk(w_c, slot_c, mask_c):
+        hist = level_histograms(
+            x_binned, base_channels, w_c, slot_c,
+            n_slots=S, n_bins=config.n_bins, packed=packed,
+        )
+        if hist_reduce is not None:
+            hist = hist_reduce(hist)     # psum over the sample axis (T_GR combine)
+        return level_scores(hist, mask_c, regression=config.regression)
+
+    if tc >= k:
+        return score_chunk(weights, sample_slot, feature_mask)
+
+    if k % tc != 0:
+        raise ValueError(f"n_trees={k} must be divisible by tree_chunk={tc}")
+    nc = k // tc
+    # NOTE: the mask's feature dim may be narrower than x_binned's when
+    # the histogram reduce scatters features (psum_scatter path).
+    mask = (
+        feature_mask
+        if feature_mask is not None
+        else jnp.ones((k, x_binned.shape[1]), jnp.bool_)
+    )
+    scores, n_node = jax.lax.map(
+        lambda args: score_chunk(*args),
+        (
+            weights.reshape(nc, tc, -1),
+            sample_slot.reshape(nc, tc, -1),
+            mask.reshape(nc, tc, mask.shape[-1]),
+        ),
+    )
+    scores = jax.tree_util.tree_map(lambda a: a.reshape(k, *a.shape[2:]), scores)
+    return scores, n_node.reshape(k, S)
+
+
+def grow_forest(
+    x_binned: jnp.ndarray,          # [N, F] uint8
+    y: jnp.ndarray,                 # [N] int32 labels (float for regression)
+    weights: jnp.ndarray,           # [k, N] in-bag multiplicities (DSI counts)
+    config: ForestConfig,
+    feature_mask: Optional[jnp.ndarray] = None,   # [k, F] bool (dim-reduction)
+) -> Forest:
+    """Train k trees level-synchronously. Pure function of its inputs."""
+    return _grow_forest_impl(x_binned, y, weights, config, feature_mask)
+
+
+@partial(jax.jit, static_argnames=("config",))
+def _grow_forest_impl(x_binned, y, weights, config, feature_mask):
+    N, F = x_binned.shape
+    k, S, B = config.n_trees, config.frontier, config.n_bins
+    depth = config.max_depth
+    n_max = max(S // 2, 1)
+    pad = config.max_nodes          # scatter dump index
+
+    base = (
+        regression_channels(y)
+        if config.regression
+        else class_channels(y, config.n_classes)
+    )
+
+    forest = init_forest(config)
+    root_counts = jnp.einsum("kn,nc->kc", weights, base)
+    forest = dataclasses.replace(
+        forest, class_counts=forest.class_counts.at[:, 0].set(root_counts)
+    )
+    if config.regression:
+        forest = dataclasses.replace(
+            forest,
+            value=forest.value.at[:, 0].set(
+                root_counts[:, 1] / jnp.maximum(root_counts[:, 0], 1e-38)
+            ),
+        )
+
+    slot_node = jnp.full((k, S), -1, jnp.int32).at[:, 0].set(0)
+    sample_slot = jnp.zeros((k, N), jnp.int32)
+    t_idx = jnp.arange(k)[:, None]
+
+    def level_step(carry, level):
+        forest, slot_node, sample_slot = carry
+
+        scores, n_node = chunked_level_scores(
+            x_binned, base, weights, sample_slot, feature_mask, config
+        )
+
+        active = slot_node >= 0
+        valid = (
+            active
+            & (scores.gain_ratio > config.min_gain)
+            & (n_node >= config.min_samples_split)
+        )
+        split_rank = _rank_splits(scores.gain_ratio, valid, n_max)    # [k, S]
+        is_split = split_rank >= 0
+
+        child_base = 1 + 2 * n_max * level
+        left_id = child_base + 2 * split_rank
+        node_or_pad = jnp.where(is_split, slot_node, pad)
+
+        feature = forest.feature.at[t_idx, node_or_pad].set(
+            jnp.where(is_split, scores.feature, -1)
+        )
+        threshold = forest.threshold.at[t_idx, node_or_pad].set(scores.threshold)
+        left_child = forest.left_child.at[t_idx, node_or_pad].set(left_id)
+
+        lid = jnp.where(is_split, left_id, pad)
+        rid = jnp.where(is_split, left_id + 1, pad)
+        class_counts = forest.class_counts.at[t_idx, lid].set(scores.left_counts)
+        class_counts = class_counts.at[t_idx, rid].set(scores.right_counts)
+        if config.regression:
+            lval = scores.left_counts[..., 1] / jnp.maximum(scores.left_counts[..., 0], 1e-38)
+            rval = scores.right_counts[..., 1] / jnp.maximum(scores.right_counts[..., 0], 1e-38)
+            value = forest.value.at[t_idx, lid].set(lval).at[t_idx, rid].set(rval)
+        else:
+            value = forest.value
+
+        forest = dataclasses.replace(
+            forest,
+            feature=feature,
+            threshold=threshold,
+            left_child=left_child,
+            class_counts=class_counts,
+            value=value,
+        )
+
+        # --- route samples to child slots (the paper's "distribute the
+        # data-index list of {v01, v02, ...} to the slaves") -------------
+        live = sample_slot >= 0
+        s_safe = jnp.where(live, sample_slot, 0)
+        rank_i = jnp.take_along_axis(split_rank, s_safe, 1)            # [k, N]
+        f_i = jnp.take_along_axis(scores.feature, s_safe, 1)
+        thr_i = jnp.take_along_axis(scores.threshold, s_safe, 1)
+        bins_i = jax.vmap(
+            lambda f_row: jnp.take_along_axis(
+                x_binned.astype(jnp.int32), f_row[:, None], axis=1
+            )[:, 0]
+        )(f_i)
+        go_right = (bins_i > thr_i).astype(jnp.int32)
+        new_slot = jnp.where(live & (rank_i >= 0), 2 * rank_i + go_right, -1)
+
+        # --- next level's frontier --------------------------------------
+        j = jnp.arange(S)[None, :]
+        n_children = 2 * is_split.sum(-1, keepdims=True)
+        new_slot_node = jnp.where(j < n_children, child_base + j, -1).astype(jnp.int32)
+
+        return (forest, new_slot_node, new_slot), None
+
+    (forest, _, _), _ = jax.lax.scan(
+        level_step, (forest, slot_node, sample_slot), jnp.arange(depth)
+    )
+    return forest
+
+
+# ---------------------------------------------------------------------------
+# Prediction
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def route_to_leaves(forest: Forest, x_binned: jnp.ndarray) -> jnp.ndarray:
+    """Leaf pool-id of every sample under every tree. Returns [k, N] int32."""
+    k = forest.feature.shape[0]
+    N = x_binned.shape[0]
+    depth = forest.config.max_depth
+    xb = x_binned.astype(jnp.int32)
+
+    def step(node, _):
+        f = jnp.take_along_axis(forest.feature, node, 1)               # [k, N]
+        leaf = f < 0
+        f_safe = jnp.where(leaf, 0, f)
+        b = jax.vmap(lambda fr: jnp.take_along_axis(xb, fr[:, None], 1)[:, 0])(f_safe)
+        thr = jnp.take_along_axis(forest.threshold, node, 1)
+        lc = jnp.take_along_axis(forest.left_child, node, 1)
+        nxt = lc + (b > thr).astype(jnp.int32)
+        return jnp.where(leaf, node, nxt), None
+
+    node0 = jnp.zeros((k, N), jnp.int32)
+    leaves, _ = jax.lax.scan(step, node0, None, length=depth)
+    return leaves
+
+
+def predict_proba_trees(forest: Forest, x_binned: jnp.ndarray) -> jnp.ndarray:
+    """Per-tree class distributions h_i(x). Returns [k, N, C]."""
+    leaves = route_to_leaves(forest, x_binned)
+    counts = jnp.take_along_axis(forest.class_counts, leaves[..., None], axis=1)
+    return counts / jnp.maximum(counts.sum(-1, keepdims=True), 1e-38)
+
+
+def predict_value_trees(forest: Forest, x_binned: jnp.ndarray) -> jnp.ndarray:
+    """Per-tree regression outputs h_i(x). Returns [k, N]."""
+    leaves = route_to_leaves(forest, x_binned)
+    return jnp.take_along_axis(forest.value, leaves, axis=1)

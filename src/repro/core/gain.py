@@ -1,0 +1,215 @@
+"""Entropy / information gain / gain ratio / variable importance (paper Eq. 2-7).
+
+All quantities are computed from **weighted class histograms** — the
+TPU-native form of the paper's gain-ratio-computing tasks T_GR (§4.2.1):
+
+    hist[t, s, f, b, c] = sum of in-bag weights of samples of tree t,
+                          sitting at frontier slot s, whose feature f
+                          falls in bin b, with label c.
+
+Cumulative sums over the bin axis evaluate *every* candidate binary split
+of every feature simultaneously; Eq. 2-6 then reduce those to a gain
+ratio per (tree, node, feature, threshold). The only cross-device
+communication this ever needs is a psum of `hist` over the sample axis
+(see core/distributed.py) — the vertical-partition property.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+# Natural-log entropies throughout; the gain *ratio* (Eq. 6) is invariant
+# to the log base as long as G and I use the same one.
+
+
+def _xlogx(p: jnp.ndarray) -> jnp.ndarray:
+    """x * log(x), safe at 0 (0 log 0 := 0)."""
+    return jnp.where(p > 0, p * jnp.log(jnp.maximum(p, 1e-38)), 0.0)
+
+
+def entropy_from_counts(counts: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
+    """Shannon entropy of a (possibly unnormalized) count vector. Eq. (2)."""
+    total = jnp.sum(counts, axis=axis, keepdims=True)
+    p = counts / jnp.maximum(total, 1e-38)
+    return -jnp.sum(_xlogx(p), axis=axis)
+
+
+class SplitScores(NamedTuple):
+    """Per-(tree, slot) best split, after the T_NS argmax."""
+
+    gain_ratio: jnp.ndarray    # [k, S] best gain ratio
+    feature: jnp.ndarray       # [k, S] int32 best feature
+    threshold: jnp.ndarray     # [k, S] int32 best bin threshold (left: bin <= thr)
+    left_counts: jnp.ndarray   # [k, S, C] class counts of left child
+    right_counts: jnp.ndarray  # [k, S, C] class counts of right child
+
+
+def split_gain_ratios(hist: jnp.ndarray) -> jnp.ndarray:
+    """Gain ratio of every candidate split. Eq. (2)-(6), vectorized.
+
+    Args:
+      hist: [..., F, B, C] weighted class histograms of one node subset.
+    Returns:
+      gr: [..., F, B-1] gain ratio of splitting feature f at threshold b
+          (left = bins 0..b). Invalid (empty-side) splits get -inf.
+    """
+    total = hist.sum(axis=-2)                       # [..., F, C] node class counts
+    n = total.sum(axis=-1)                          # [..., F]
+    h_node = entropy_from_counts(total)             # [..., F]  Entropy(S_i), Eq. 2
+
+    left = jnp.cumsum(hist, axis=-2)[..., :-1, :]   # [..., F, B-1, C]
+    right = total[..., None, :] - left              # [..., F, B-1, C]
+    n_l = left.sum(-1)                              # [..., F, B-1]
+    n_r = right.sum(-1)
+    n_tot = jnp.maximum(n[..., None], 1e-38)
+
+    # Eq. (3): conditional entropy of the target given the split.
+    h_cond = (n_l / n_tot) * entropy_from_counts(left) + (
+        n_r / n_tot
+    ) * entropy_from_counts(right)
+    gain = h_node[..., None] - h_cond               # Eq. (5)
+
+    # Eq. (4): self-split information of the binary partition.
+    p_l = n_l / n_tot
+    p_r = n_r / n_tot
+    split_info = -(_xlogx(p_l) + _xlogx(p_r))
+
+    gr = gain / jnp.maximum(split_info, 1e-12)      # Eq. (6)
+    valid = (n_l > 0) & (n_r > 0)
+    return jnp.where(valid, gr, -jnp.inf)
+
+
+def variance_gains(sum_hist, sumsq_hist, cnt_hist):
+    """Regression analogue: variance reduction per candidate split.
+
+    Args: [..., F, B] histograms of sum(y*w), sum(y^2*w), sum(w).
+    Returns: [..., F, B-1] gain (invalid -> -inf).
+    """
+
+    def sse(s, ss, c):
+        return ss - s * s / jnp.maximum(c, 1e-38)
+
+    tot_s = sum_hist.sum(-1)
+    tot_ss = sumsq_hist.sum(-1)
+    tot_c = cnt_hist.sum(-1)
+    l_s = jnp.cumsum(sum_hist, -1)[..., :-1]
+    l_ss = jnp.cumsum(sumsq_hist, -1)[..., :-1]
+    l_c = jnp.cumsum(cnt_hist, -1)[..., :-1]
+    r_s = tot_s[..., None] - l_s
+    r_ss = tot_ss[..., None] - l_ss
+    r_c = tot_c[..., None] - l_c
+    gain = sse(tot_s, tot_ss, tot_c)[..., None] - sse(l_s, l_ss, l_c) - sse(r_s, r_ss, r_c)
+    valid = (l_c > 0) & (r_c > 0)
+    return jnp.where(valid, gain, -jnp.inf)
+
+
+def best_splits(hist: jnp.ndarray, feature_mask: jnp.ndarray | None = None) -> SplitScores:
+    """The node-splitting task T_NS (paper Definition 4): global best split.
+
+    Args:
+      hist: [k, S, F, B, C].
+      feature_mask: optional [k, F] bool — features admitted by the
+        dimension-reduction step (paper Alg. 3.1). Masked-out features
+        never win the argmax.
+    Returns: SplitScores with [k, S] leaders + child class counts.
+    """
+    k, S, F, B, C = hist.shape
+    gr = split_gain_ratios(hist)                    # [k, S, F, B-1]
+    if feature_mask is not None:
+        gr = jnp.where(feature_mask[:, None, :, None], gr, -jnp.inf)
+
+    flat = gr.reshape(k, S, F * (B - 1))
+    best = jnp.argmax(flat, axis=-1)                # [k, S]
+    best_gr = jnp.take_along_axis(flat, best[..., None], axis=-1)[..., 0]
+    best_f = (best // (B - 1)).astype(jnp.int32)
+    best_thr = (best % (B - 1)).astype(jnp.int32)
+
+    # Child class counts of the winning split (free from the histogram —
+    # the paper's "intermediate results submitted to subsequent tasks").
+    cum = jnp.cumsum(hist, axis=-2)                 # [k, S, F, B, C]
+    f_idx = best_f[..., None, None, None]           # [k, S, 1, 1, 1]
+    cum_f = jnp.take_along_axis(cum, jnp.broadcast_to(f_idx, (k, S, 1, B, C)), axis=2)[:, :, 0]
+    left_counts = jnp.take_along_axis(
+        cum_f, jnp.broadcast_to(best_thr[..., None, None], (k, S, 1, C)), axis=2
+    )[:, :, 0]
+    total = hist.sum(axis=-2)                       # [k, S, F, C]
+    total_f = jnp.take_along_axis(
+        total, jnp.broadcast_to(best_f[..., None, None], (k, S, 1, C)), axis=2
+    )[:, :, 0]
+    right_counts = total_f - left_counts
+    return SplitScores(best_gr, best_f, best_thr, left_counts, right_counts)
+
+
+def level_scores(
+    hist: jnp.ndarray,
+    feature_mask: jnp.ndarray | None,
+    *,
+    regression: bool = False,
+) -> tuple[SplitScores, jnp.ndarray]:
+    """T_NS stage-1: per-(tree, slot) winning split + node sample count.
+
+    Args:
+      hist: [k, S, F, B, C] (C = n_classes, or 3 regression channels).
+    Returns: (SplitScores, n_node [k, S]).
+    """
+    k, S, F, B, C = hist.shape
+    if not regression:
+        scores = best_splits(hist, feature_mask)
+        n_node = scores.left_counts.sum(-1) + scores.right_counts.sum(-1)
+        return scores, n_node
+
+    gains = variance_gains(hist[..., 1], hist[..., 2], hist[..., 0])
+    if feature_mask is not None:
+        gains = jnp.where(feature_mask[:, None, :, None], gains, -jnp.inf)
+    flat = gains.reshape(k, S, -1)
+    bi = jnp.argmax(flat, -1)
+    best_gain = jnp.take_along_axis(flat, bi[..., None], -1)[..., 0]
+    best_f = (bi // (B - 1)).astype(jnp.int32)
+    best_thr = (bi % (B - 1)).astype(jnp.int32)
+    cum = jnp.cumsum(hist, axis=-2)
+    cum_f = jnp.take_along_axis(
+        cum, jnp.broadcast_to(best_f[..., None, None, None], (k, S, 1, B, C)), 2
+    )[:, :, 0]
+    left_counts = jnp.take_along_axis(
+        cum_f, jnp.broadcast_to(best_thr[..., None, None], (k, S, 1, C)), 2
+    )[:, :, 0]
+    total_f = jnp.take_along_axis(
+        hist.sum(-2), jnp.broadcast_to(best_f[..., None, None], (k, S, 1, C)), 2
+    )[:, :, 0]
+    right_counts = total_f - left_counts
+    scores = SplitScores(best_gain, best_f, best_thr, left_counts, right_counts)
+    return scores, total_f[..., 0]
+
+
+def multiway_gain_ratio(hist: jnp.ndarray) -> jnp.ndarray:
+    """Faithful Eq. (2)-(6) with V(y_ij) = the bin values (multiway form).
+
+    This is the quantity the paper ranks features by in Alg. 3.1: each
+    distinct value of y_ij is a branch. With binned features the value
+    set is the bin set.
+
+    Args:  hist: [..., F, B, C].
+    Returns: gr: [..., F].
+    """
+    total = hist.sum(axis=-2)                        # [..., F, C]
+    n = jnp.maximum(total.sum(axis=-1), 1e-38)       # [..., F]
+    h_node = entropy_from_counts(total)              # Eq. 2
+    n_b = hist.sum(axis=-1)                          # [..., F, B]
+    p_b = n_b / n[..., None]
+    h_cond = jnp.sum(p_b * entropy_from_counts(hist), axis=-1)   # Eq. 3
+    gain = h_node - h_cond                           # Eq. 5
+    split_info = -jnp.sum(_xlogx(p_b), axis=-1)      # Eq. 4 (self-split info)
+    return gain / jnp.maximum(split_info, 1e-12)     # Eq. 6
+
+
+def variable_importance(gr: jnp.ndarray) -> jnp.ndarray:
+    """Eq. (7): VI(y_ij) = GR(y_ij) / sum_a GR(y_ia), per tree.
+
+    Args:  gr: [k, F] root-node gain ratio of each feature (clamped >= 0).
+    Returns: vi: [k, F] normalized importances.
+    """
+    g = jnp.maximum(gr, 0.0)
+    return g / jnp.maximum(g.sum(axis=-1, keepdims=True), 1e-38)

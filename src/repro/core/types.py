@@ -1,0 +1,131 @@
+"""Core datatypes for the Parallel Random Forest (PRF).
+
+The forest is stored as flat, fixed-shape arrays (a *node pool*) so that
+training and inference are pure XLA programs with static shapes:
+
+* every tree owns ``max_nodes = 1 + 2 * frontier * depth`` pool slots;
+* level ``L`` always allocates its children inside the pool range
+  ``[1 + 2*frontier*L, 1 + 2*frontier*(L+1))`` — allocation is a pure
+  index computation, no dynamic counters cross a ``lax.scan`` boundary.
+
+This mirrors the paper's task DAG: one pool "band" per DAG stage.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _pytree_dataclass(cls):
+    """Register a dataclass as a JAX pytree (fields = leaves, config aux)."""
+    fields = [f.name for f in dataclasses.fields(cls) if not f.metadata.get("static")]
+    static = [f.name for f in dataclasses.fields(cls) if f.metadata.get("static")]
+
+    def flatten(obj):
+        return tuple(getattr(obj, n) for n in fields), tuple(getattr(obj, n) for n in static)
+
+    def unflatten(aux, leaves):
+        return cls(**dict(zip(fields, leaves)), **dict(zip(static, aux)))
+
+    jax.tree_util.register_pytree_node(cls, flatten, unflatten)
+    return cls
+
+
+def static_field(**kw):
+    return dataclasses.field(metadata={"static": True}, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class ForestConfig:
+    """Hyper-parameters of the PRF algorithm (paper §3–§4)."""
+
+    n_trees: int = 32                 # k — ensemble size
+    max_depth: int = 8                # levels of splitting
+    n_bins: int = 64                  # histogram bins per feature (TPU adaptation)
+    n_classes: int = 2                # C
+    max_frontier: int = 0             # beam width; 0 => full 2**max_depth
+    min_samples_split: int = 2
+    min_gain: float = 1e-7            # minimal gain ratio to split
+    # --- paper §3.2: dimension reduction ----------------------------------
+    # "importance": paper's Alg. 3.1 (top-k_imp by VI + random rest)
+    # "random":     Breiman RF — m features per tree, uniformly (paper §3.1)
+    # "all":        no per-tree feature restriction (bagged trees)
+    feature_mode: str = "importance"
+    n_important: int = 0              # paper's k  (0 => ceil(sqrt(m_selected)))
+    n_selected: int = 0               # paper's m  (0 => ceil(sqrt(M)))
+    # --- paper §3.3: weighted voting --------------------------------------
+    weighted_voting: bool = True
+    soft_voting: bool = False         # Majority[w_i * h_i(x)] (hard) vs prob-weighted
+    # --- task-parallel execution knobs (§4.2) ------------------------------
+    tree_chunk: int = 0               # trees processed per level-step (0 => all)
+    regression: bool = False
+    # --- §Perf optimizations (beyond-paper; see EXPERIMENTS.md §Perf) ------
+    packed_hist: bool = False         # class index folded into segment ids
+    hist_reduce: str = "psum"         # psum | psum_scatter (distributed T_GR)
+
+    @property
+    def frontier(self) -> int:
+        f = self.max_frontier if self.max_frontier > 0 else 2 ** self.max_depth
+        return min(f, 2 ** self.max_depth)
+
+    @property
+    def max_splits_per_level(self) -> int:
+        return max(self.frontier // 2, 1)
+
+    @property
+    def max_nodes(self) -> int:
+        # Each level allocates one band of at most 2*max_splits children.
+        return 1 + 2 * self.max_splits_per_level * self.max_depth
+
+    def resolved(self, n_features: int) -> "ForestConfig":
+        """Fill data-dependent defaults (m = ceil(sqrt(M)), k_imp = ceil(sqrt(m)))."""
+        import math
+
+        m = self.n_selected if self.n_selected > 0 else max(1, int(math.ceil(math.sqrt(n_features))))
+        m = min(m, n_features)
+        k_imp = self.n_important if self.n_important > 0 else max(1, int(math.ceil(math.sqrt(m))))
+        k_imp = min(k_imp, m)
+        return dataclasses.replace(self, n_selected=m, n_important=k_imp)
+
+
+@_pytree_dataclass
+@dataclasses.dataclass
+class Forest:
+    """A trained PRF model — flat node-pool representation.
+
+    Shapes (k = n_trees, P = max_nodes, C = n_classes):
+      feature      [k, P] int32   split feature, -1 => leaf / unused
+      threshold    [k, P] int32   go left iff bin <= threshold
+      left_child   [k, P] int32   pool id of left child (right = left+1), -1 => leaf
+      class_counts [k, P, C] f32  weighted class histogram at node creation
+      value        [k, P] f32     regression value (weighted mean of y)
+      tree_weight  [k] f32        w_i — OOB accuracy (Eq. 8) or 1.0
+    """
+
+    feature: jnp.ndarray
+    threshold: jnp.ndarray
+    left_child: jnp.ndarray
+    class_counts: jnp.ndarray
+    value: jnp.ndarray
+    tree_weight: jnp.ndarray
+    config: ForestConfig = static_field(default=None)
+
+    @property
+    def n_trees(self) -> int:
+        return self.feature.shape[0]
+
+
+@_pytree_dataclass
+@dataclasses.dataclass
+class GrowthState:
+    """Mutable state threaded through the level-synchronous growth scan."""
+
+    forest: Forest
+    slot_node: jnp.ndarray     # [k, S] pool node id of each active frontier slot, -1 idle
+    sample_slot: jnp.ndarray   # [k, N] frontier slot of each sample, -1 parked
+    rng: jnp.ndarray           # PRNGKey
+    level: jnp.ndarray         # scalar int32

@@ -1,0 +1,96 @@
+"""OOB-weighted voting (paper §3.3, Eq. 8-10).
+
+After training, each tree h_i is evaluated on its own Out-Of-Bag set
+OOB_i; the classification accuracy CA_i (Eq. 8) becomes the tree's voting
+weight w_i. Prediction then takes the weighted majority (Eq. 10) or the
+weighted regression average (Eq. 9).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .forest import predict_proba_trees, predict_value_trees
+from .types import Forest
+
+
+def oob_accuracy(
+    forest: Forest, x_binned: jnp.ndarray, y: jnp.ndarray, weights: jnp.ndarray
+) -> jnp.ndarray:
+    """Eq. (8): CA_i = #correct / (#correct + #error) over OOB_i.
+
+    Args:
+      weights: [k, N] in-bag multiplicities (0 => sample is OOB for tree).
+    Returns: [k] float32 accuracies (0.5 prior when OOB set is empty).
+    """
+    probs = predict_proba_trees(forest, x_binned)          # [k, N, C]
+    pred = jnp.argmax(probs, axis=-1)                      # [k, N]
+    oob = (weights == 0.0).astype(jnp.float32)             # [k, N]
+    correct = jnp.sum(oob * (pred == y[None]).astype(jnp.float32), axis=1)
+    total = jnp.sum(oob, axis=1)
+    return jnp.where(total > 0, correct / jnp.maximum(total, 1.0), 0.5)
+
+
+def oob_r2(forest, x_binned, y, weights):
+    """Regression analogue of Eq. (8): per-tree OOB R^2 clipped to [0, 1]."""
+    vals = predict_value_trees(forest, x_binned)           # [k, N]
+    oob = (weights == 0.0).astype(jnp.float32)
+    n = jnp.maximum(oob.sum(1), 1.0)
+    err = jnp.sum(oob * (vals - y[None]) ** 2, axis=1) / n
+    mean = jnp.sum(oob * y[None], axis=1) / n
+    var = jnp.sum(oob * (y[None] - mean[:, None]) ** 2, axis=1) / n
+    return jnp.clip(1.0 - err / jnp.maximum(var, 1e-38), 0.0, 1.0)
+
+
+def weighted_vote(
+    probs: jnp.ndarray, tree_weight: jnp.ndarray, *, soft: bool = False
+) -> jnp.ndarray:
+    """Eq. (10): H_c(X) = Majority_i [ w_i x h_i(x) ].
+
+    Args:
+      probs: [k, N, C] per-tree class distributions.
+      tree_weight: [k] w_i = CA_i (or ones for the unweighted baseline).
+      soft: weight the full distribution instead of the argmax vote
+            (a strictly-stronger variant; the paper's Eq. 10 is hard).
+    Returns: scores [N, C]; argmax is the predicted class.
+    """
+    w = tree_weight[:, None, None]
+    if soft:
+        return jnp.sum(w * probs, axis=0)
+    votes = jax.nn.one_hot(jnp.argmax(probs, -1), probs.shape[-1], dtype=probs.dtype)
+    return jnp.sum(w * votes, axis=0)
+
+
+def weighted_regression(
+    values: jnp.ndarray, tree_weight: jnp.ndarray, *, faithful_eq9: bool = False
+) -> jnp.ndarray:
+    """Eq. (9): H_r(X) = (1/k) sum_i w_i * h_i(x).
+
+    The literal Eq. (9) divides by k, which biases the magnitude whenever
+    sum(w) != k; the default normalizes by sum(w) (the standard weighted
+    mean). ``faithful_eq9=True`` reproduces the paper exactly.
+    """
+    w = tree_weight[:, None]
+    if faithful_eq9:
+        return jnp.mean(w * values, axis=0)
+    return jnp.sum(w * values, axis=0) / jnp.maximum(tree_weight.sum(), 1e-38)
+
+
+def predict(forest: Forest, x_binned: jnp.ndarray) -> jnp.ndarray:
+    """Full PRF prediction (classification): weighted majority class [N]."""
+    probs = predict_proba_trees(forest, x_binned)
+    w = forest.tree_weight if forest.config.weighted_voting else jnp.ones_like(
+        forest.tree_weight
+    )
+    scores = weighted_vote(probs, w, soft=forest.config.soft_voting)
+    return jnp.argmax(scores, axis=-1)
+
+
+def predict_regression(forest: Forest, x_binned: jnp.ndarray) -> jnp.ndarray:
+    vals = predict_value_trees(forest, x_binned)
+    w = forest.tree_weight if forest.config.weighted_voting else jnp.ones_like(
+        forest.tree_weight
+    )
+    return weighted_regression(vals, w)

@@ -1,0 +1,111 @@
+"""Pallas TPU kernel: blocked attention with online softmax (flash-style).
+
+Serving/long-context hot spot. Grid = (BH, q_blocks, kv_blocks) with the
+kv axis innermost; the running (m, l, acc) statistics live in VMEM scratch
+and persist across kv steps — the classic reduction-grid pattern. Causal
+and sliding-window masking are applied per tile.
+
+Block shapes default to (128, 128): MXU-aligned on the (q, kv) matmul
+dims; D (head dim) rides along unblocked (<= 256 for all our archs).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _attn_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, bq, bkv, causal, window, lq, lk,
+):
+    ikv = pl.program_id(2)
+    nkv = pl.num_programs(2)
+
+    @pl.when(ikv == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)                    # [bq, D]
+    k = k_ref[0].astype(jnp.float32)                    # [bkv, D]
+    v = v_ref[0].astype(jnp.float32)
+    scale = q.shape[-1] ** -0.5
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                                           # [bq, bkv]
+
+    iq = pl.program_id(1)
+    qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0) + (lk - lq)
+    kpos = ikv * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+    mask = jnp.ones((bq, bkv), jnp.bool_)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, _NEG_INF)
+
+    m_prev = m_scr[...]                                 # [bq]
+    m_cur = jnp.maximum(m_prev, s.max(axis=-1))
+    alpha = jnp.exp(m_prev - m_cur)                     # rescale old stats
+    p = jnp.exp(s - m_cur[:, None])                     # [bq, bkv]
+    l_cur = alpha * l_scr[...] + p.sum(axis=-1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_cur
+    l_scr[...] = l_cur
+
+    @pl.when(ikv == nkv - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-38)[:, None]).astype(
+            o_ref.dtype
+        )
+
+
+def attention_pallas_call(
+    q: jnp.ndarray,   # [BH, Lq, D]
+    k: jnp.ndarray,   # [BH, Lk, D]
+    v: jnp.ndarray,   # [BH, Lk, D]
+    *,
+    causal: bool = True,
+    window: int = 0,
+    bq: int = 128,
+    bkv: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    BH, Lq, D = q.shape
+    Lk = k.shape[1]
+    bq = min(bq, Lq)
+    bkv = min(bkv, Lk)
+    if Lq % bq or Lk % bkv:
+        raise ValueError(f"L ({Lq},{Lk}) not divisible by blocks ({bq},{bkv})")
+    grid = (BH, Lq // bq, Lk // bkv)
+
+    return pl.pallas_call(
+        functools.partial(
+            _attn_kernel, bq=bq, bkv=bkv, causal=causal, window=window,
+            lq=Lq, lk=Lk,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda b, iq, ikv: (b, iq, 0)),
+            pl.BlockSpec((1, bkv, D), lambda b, iq, ikv: (b, ikv, 0)),
+            pl.BlockSpec((1, bkv, D), lambda b, iq, ikv: (b, ikv, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda b, iq, ikv: (b, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Lq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,40 @@
+"""jit'd public wrapper for blocked attention."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import attention_pallas_call
+from .ref import attention_ref
+
+
+@partial(
+    jax.jit,
+    static_argnames=("causal", "window", "use_pallas", "interpret", "bq", "bkv"),
+)
+def flash_attention(
+    q: jnp.ndarray,   # [B, H, Lq, D]
+    k: jnp.ndarray,   # [B, H, Lk, D]
+    v: jnp.ndarray,   # [B, H, Lk, D]
+    *,
+    causal: bool = True,
+    window: int = 0,
+    use_pallas: bool = True,
+    interpret: bool = True,     # CPU container; set False on real TPU
+    bq: int = 128,
+    bkv: int = 128,
+) -> jnp.ndarray:
+    B, H, Lq, D = q.shape
+    qf = q.reshape(B * H, Lq, D)
+    kf = k.reshape(B * H, -1, D)
+    vf = v.reshape(B * H, -1, D)
+    if not use_pallas:
+        out = attention_ref(qf, kf, vf, causal=causal, window=window)
+    else:
+        out = attention_pallas_call(
+            qf, kf, vf, causal=causal, window=window, bq=bq, bkv=bkv,
+            interpret=interpret,
+        )
+    return out.reshape(B, H, Lq, D)

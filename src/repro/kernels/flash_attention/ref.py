@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for blocked attention."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jnp.ndarray,  # [BH, Lq, D]
+    k: jnp.ndarray,  # [BH, Lk, D]
+    v: jnp.ndarray,  # [BH, Lk, D]
+    *,
+    causal: bool = True,
+    window: int = 0,   # 0 = unbounded; else only attend to last `window` keys
+) -> jnp.ndarray:
+    scale = q.shape[-1] ** -0.5
+    logits = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    logits *= scale
+    Lq, Lk = q.shape[1], k.shape[1]
+    qpos = jnp.arange(Lq)[:, None] + (Lk - Lq)   # align ends (decode-friendly)
+    kpos = jnp.arange(Lk)[None, :]
+    mask = jnp.ones((Lq, Lk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None], logits, -jnp.inf)
+    probs = jnp.exp(logits - logits.max(-1, keepdims=True))
+    probs = probs / probs.sum(-1, keepdims=True)
+    return jnp.einsum("bqk,bkd->bqd", probs, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,1 @@
+from .ops import fused_histogram  # noqa: F401

@@ -1,0 +1,101 @@
+"""Pallas TPU kernel: fused weighted histogram for T_GR (paper §4.2.1).
+
+TPU adaptation of the paper's gain-ratio hot spot. A CPU worker scatters
+into histogram bins; TPUs have no fast scatter, so the kernel builds the
+histogram as **one-hot matmuls on the MXU**:
+
+    onehot(slot*B + bin_f)^T  [S*B, N_blk]  @  wch [N_blk, C]  ->  [S*B, C]
+
+Tiling:
+  grid = (F_blocks, N_blocks); the N axis is the innermost (sequential)
+  grid dimension, so the [S*B, C] accumulator tile for a feature block
+  stays resident in VMEM while sample blocks stream through (classic
+  reduction-grid pattern).
+
+VMEM working set per step (defaults N_blk=512, F_blk=128, S*B <= 2048,
+C <= 32):  bins 512x128 int32 (256 KiB) + wch 512x32 f32 (64 KiB)
++ out 2048x128? no — out tile is [S, F_blk, B, C] laid out as
+[F_blk, S*B, C] scratch (128 * 2048 * 32 f32 = 32 MiB would NOT fit; we
+therefore loop features *inside* the block with a fori_loop and keep the
+out tile at [S*B, C] per feature, writing each feature's slab to the
+output ref as it completes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hist_kernel(bins_ref, wch_ref, slot_ref, out_ref, *, n_slots, n_bins, f_blk):
+    """One (feature-block, sample-block) grid step."""
+    S, B = n_slots, n_bins
+    SB = S * B
+    n_idx = pl.program_id(1)
+
+    @pl.when(n_idx == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    slot = slot_ref[...]                                  # [N_blk]
+    parked = slot < 0
+    base = jnp.where(parked, 0, slot) * B                 # [N_blk]
+    # Parked samples contribute zero weight instead of a dump row so the
+    # one-hot matmul needs no extra segment.
+    wch = wch_ref[...] * (~parked)[:, None].astype(wch_ref.dtype)   # [N_blk, C]
+
+    def body(f, _):
+        idx = base + bins_ref[:, f].astype(jnp.int32)     # [N_blk]
+        onehot = (
+            idx[:, None] == jax.lax.broadcasted_iota(jnp.int32, (1, SB), 1)
+        ).astype(wch.dtype)                               # [N_blk, SB]
+        acc = jax.lax.dot_general(
+            onehot, wch,
+            dimension_numbers=(((0,), (0,)), ((), ())),   # onehot^T @ wch
+            preferred_element_type=jnp.float32,
+        )                                                 # [SB, C]
+        out_ref[f, :, :] += acc
+        return 0
+
+    jax.lax.fori_loop(0, f_blk, body, 0)
+
+
+def hist_pallas_call(
+    x_bins: jnp.ndarray,   # [N, F] int (any int dtype)
+    wch: jnp.ndarray,      # [N, C] float32
+    slot: jnp.ndarray,     # [N] int32
+    *,
+    n_slots: int,
+    n_bins: int,
+    n_blk: int = 512,
+    f_blk: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Returns hist [S, F, B, C] float32."""
+    N, F = x_bins.shape
+    C = wch.shape[1]
+    S, B = n_slots, n_bins
+    n_blk = min(n_blk, N)
+    f_blk = min(f_blk, F)
+    if N % n_blk or F % f_blk:
+        raise ValueError(f"N={N} % n_blk={n_blk} or F={F} % f_blk={f_blk} != 0")
+
+    grid = (F // f_blk, N // n_blk)
+    out = pl.pallas_call(
+        functools.partial(
+            _hist_kernel, n_slots=S, n_bins=B, f_blk=f_blk
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n_blk, f_blk), lambda f, n: (n, f)),   # bins
+            pl.BlockSpec((n_blk, C), lambda f, n: (n, 0)),       # wch
+            pl.BlockSpec((n_blk,), lambda f, n: (n,)),           # slot
+        ],
+        out_specs=pl.BlockSpec((f_blk, S * B, C), lambda f, n: (f, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((F, S * B, C), jnp.float32),
+        interpret=interpret,
+    )(x_bins.astype(jnp.int32), wch, slot)
+    # [F, S*B, C] -> [S, F, B, C]
+    return jnp.transpose(out.reshape(F, S, B, C), (1, 0, 2, 3))

@@ -1,0 +1,36 @@
+"""jit'd public wrapper for the fused T_GR histogram kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import hist_pallas_call
+from .ref import histogram_ref
+
+
+@partial(
+    jax.jit,
+    static_argnames=("n_slots", "n_bins", "use_pallas", "interpret", "n_blk", "f_blk"),
+)
+def fused_histogram(
+    x_bins: jnp.ndarray,
+    wch: jnp.ndarray,
+    slot: jnp.ndarray,
+    *,
+    n_slots: int,
+    n_bins: int,
+    use_pallas: bool = True,
+    interpret: bool = True,     # CPU container: interpret; False on real TPU
+    n_blk: int = 512,
+    f_blk: int = 128,
+) -> jnp.ndarray:
+    """hist [S, F, B, C]; Pallas on TPU, jnp oracle otherwise."""
+    if not use_pallas:
+        return histogram_ref(x_bins, wch, slot, n_slots=n_slots, n_bins=n_bins)
+    return hist_pallas_call(
+        x_bins, wch, slot,
+        n_slots=n_slots, n_bins=n_bins,
+        n_blk=n_blk, f_blk=f_blk, interpret=interpret,
+    )

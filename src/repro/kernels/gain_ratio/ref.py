@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the fused T_GR histogram kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def histogram_ref(
+    x_bins: jnp.ndarray,   # [N, F] integer bin ids
+    wch: jnp.ndarray,      # [N, C] weighted channels (w * onehot(y))
+    slot: jnp.ndarray,     # [N] int32 frontier slot, -1 = parked
+    *,
+    n_slots: int,
+    n_bins: int,
+) -> jnp.ndarray:
+    """hist[s, f, b, c] = sum_i wch[i, c] * [slot_i = s] * [x_bins[i, f] = b]."""
+    S, B = n_slots, n_bins
+    base = jnp.where(slot >= 0, slot, S) * B
+
+    def per_feature(bins_f):
+        seg = base + bins_f.astype(jnp.int32)
+        out = jax.ops.segment_sum(wch, seg, num_segments=S * B + B)
+        return out[: S * B].reshape(S, B, -1)
+
+    return jnp.transpose(jax.vmap(per_feature, in_axes=1)(x_bins), (1, 0, 2, 3))

@@ -1,0 +1,1 @@
+from .ops import ssd_scan  # noqa: F401

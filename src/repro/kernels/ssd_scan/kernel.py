@@ -1,0 +1,105 @@
+"""Pallas TPU kernel: Mamba-2 SSD chunked scan (state-space duality).
+
+The SSD insight: within a chunk of Q steps the recurrence is a masked
+attention-like matmul (MXU work); across chunks only the [N, P] state is
+carried. Grid = (BH, n_chunks) with chunks innermost-sequential; the
+carried state lives in VMEM scratch. Chunk size 128 aligns the (Q x Q)
+and (Q x N)x(N x P) matmuls to the MXU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, la_ref, b_ref, c_ref, y_ref, hT_ref, h_scr, *, q_blk):
+    ic = pl.program_id(1)
+    nc = pl.num_programs(1)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0].astype(jnp.float32)      # [Q, P]
+    la = la_ref[0].astype(jnp.float32)    # [Q]
+    b = b_ref[0].astype(jnp.float32)      # [Q, N]
+    c = c_ref[0].astype(jnp.float32)      # [Q, N]
+
+    lc = jnp.cumsum(la)                   # [Q] chunk-local cumulative log decay
+
+    # Intra-chunk: masked decay-weighted "attention" on the MXU.
+    s = jax.lax.dot_general(
+        c, b, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                     # [Q, Q] = c_i . b_j
+    i_idx = jax.lax.broadcasted_iota(jnp.int32, (q_blk, q_blk), 0)
+    j_idx = jax.lax.broadcasted_iota(jnp.int32, (q_blk, q_blk), 1)
+    mask = j_idx <= i_idx
+    # clamp exponent under the mask (j > i would overflow exp -> inf)
+    decay = jnp.exp(jnp.where(mask, lc[:, None] - lc[None, :], 0.0))
+    s = jnp.where(mask, s * decay, 0.0)
+    y = jax.lax.dot_general(
+        s, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                     # [Q, P]
+
+    # Carried-state contribution: y_i += (c_i * exp(lc_i)) @ H_prev.
+    h_prev = h_scr[...]                   # [N, P]
+    y += jax.lax.dot_general(
+        c * jnp.exp(lc)[:, None], h_prev,
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+    )
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    # State update: H = exp(lc_Q) * H_prev + sum_j exp(lc_Q - lc_j) b_j x_j^T.
+    w = jnp.exp(lc[-1] - lc)              # [Q]
+    h_new = jnp.exp(lc[-1]) * h_prev + jax.lax.dot_general(
+        b * w[:, None], x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    h_scr[...] = h_new
+
+    @pl.when(ic == nc - 1)
+    def _finish():
+        hT_ref[0] = h_new.astype(hT_ref.dtype)
+
+
+def ssd_pallas_call(
+    x: jnp.ndarray,     # [BH, L, P]
+    loga: jnp.ndarray,  # [BH, L]
+    b: jnp.ndarray,     # [BH, L, N]
+    c: jnp.ndarray,     # [BH, L, N]
+    *,
+    q_blk: int = 128,
+    interpret: bool = False,
+):
+    BH, L, P = x.shape
+    N = b.shape[-1]
+    q_blk = min(q_blk, L)
+    if L % q_blk:
+        raise ValueError(f"L={L} % q_blk={q_blk} != 0")
+    grid = (BH, L // q_blk)
+
+    y, hT = pl.pallas_call(
+        functools.partial(_ssd_kernel, q_blk=q_blk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, q_blk, P), lambda s, ic: (s, ic, 0)),
+            pl.BlockSpec((1, q_blk), lambda s, ic: (s, ic)),
+            pl.BlockSpec((1, q_blk, N), lambda s, ic: (s, ic, 0)),
+            pl.BlockSpec((1, q_blk, N), lambda s, ic: (s, ic, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, q_blk, P), lambda s, ic: (s, ic, 0)),
+            pl.BlockSpec((1, N, P), lambda s, ic: (s, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, L, P), x.dtype),
+            jax.ShapeDtypeStruct((BH, N, P), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(x, loga, b, c)
+    return y, hT

@@ -1,0 +1,27 @@
+"""jit'd public wrapper for the SSD chunked scan."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ssd_pallas_call
+from .ref import ssd_ref
+
+
+@partial(jax.jit, static_argnames=("use_pallas", "interpret", "q_blk"))
+def ssd_scan(
+    x: jnp.ndarray,     # [BH, L, P]
+    loga: jnp.ndarray,  # [BH, L]
+    b: jnp.ndarray,     # [BH, L, N]
+    c: jnp.ndarray,     # [BH, L, N]
+    *,
+    use_pallas: bool = True,
+    interpret: bool = True,     # CPU container; set False on real TPU
+    q_blk: int = 128,
+):
+    """Returns (y [BH, L, P], h_final [BH, N, P])."""
+    if not use_pallas:
+        return ssd_ref(x, loga, b, c)
+    return ssd_pallas_call(x, loga, b, c, q_blk=q_blk, interpret=interpret)

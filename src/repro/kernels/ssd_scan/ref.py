@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the Mamba-2 SSD scan: sequential state recurrence.
+
+    h_t = a_t * h_{t-1} + b_t (x) x_t         h in R^{N x P}
+    y_t = c_t^T h_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(
+    x: jnp.ndarray,     # [BH, L, P]
+    loga: jnp.ndarray,  # [BH, L]   log decay (<= 0)
+    b: jnp.ndarray,     # [BH, L, N]
+    c: jnp.ndarray,     # [BH, L, N]
+    h0: jnp.ndarray | None = None,   # [BH, N, P]
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y [BH, L, P], h_final [BH, N, P])."""
+    BH, L, P = x.shape
+    N = b.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((BH, N, P), jnp.float32)
+
+    def per_seq(x_s, la_s, b_s, c_s, h_init):
+        def step(h, inp):
+            x_t, la_t, b_t, c_t = inp
+            h = jnp.exp(la_t) * h + b_t[:, None] * x_t[None, :]
+            y_t = c_t @ h
+            return h, y_t
+
+        h_fin, y = jax.lax.scan(step, h_init, (x_s, la_s, b_s, c_s))
+        return y, h_fin
+
+    y, h_fin = jax.vmap(per_seq)(
+        x.astype(jnp.float32), loga.astype(jnp.float32),
+        b.astype(jnp.float32), c.astype(jnp.float32), h0,
+    )
+    return y, h_fin

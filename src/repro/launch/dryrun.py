@@ -1,0 +1,369 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import SHAPES, all_configs, get_config
+from ..models import build_model
+from ..roofline.analysis import HW, analyze_compiled, roofline_terms
+from ..training.optimizer import AdamWConfig
+from ..training.sharding import cache_specs, param_specs
+from ..training.train_step import TrainState, init_state, make_train_step
+from .mesh import dp_axes, make_production_mesh
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+This is the proof that the distribution config is coherent without real
+hardware: XLA's SPMD partitioner must accept every sharding, the
+collective schedule must exist, and memory_analysis must fit 16 GB/chip.
+Artifacts (cost, memory, per-collective bytes, roofline terms) are
+written as JSON for EXPERIMENTS.md §Dry-run and §Roofline.
+"""
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, spec))
+
+
+def _tree_sds(shapes_tree, shardings_tree):
+    return jax.tree_util.tree_map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shapes_tree, shardings_tree,
+    )
+
+
+def _extras_specs(cfg, batch: int, mesh, dp, *, micro_axis: bool):
+    """Modality-frontend stubs (per assignment: precomputed embeddings)."""
+    lead = (None, dp) if micro_axis else (dp,)
+    out = {}
+    if cfg.family == "vlm":
+        out["vision_embeds"] = (
+            (batch, cfg.vision_tokens, cfg.d_model), jnp.float32,
+            P(*lead, None, None),
+        )
+    if cfg.family == "encdec":
+        out["frames"] = (
+            (batch, cfg.encoder_frames, cfg.d_model), jnp.float32,
+            P(*lead, None, None),
+        )
+    return out
+
+
+def model_flops_global(cfg, shape: Dict) -> float:
+    n_active = cfg.active_param_count()
+    if shape["kind"] == "train":
+        tokens = shape["global_batch"] * shape["seq_len"]
+        return 6.0 * n_active * tokens
+    if shape["kind"] == "prefill":
+        tokens = shape["global_batch"] * shape["seq_len"]
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape["global_batch"]       # decode: one token
+
+
+# ---------------------------------------------------------------------------
+# Cell builders: return (jitted_fn, arg_specs_tuple)
+# ---------------------------------------------------------------------------
+
+
+def build_train_cell(cfg, shape, mesh, opts=()):
+    """opts (--opt, comma-sep): §Perf hillclimb knobs.
+
+    no-fsdp      params replicated over DP axes (TP only)
+    micro4       4 sequences / device / microbatch (4x fewer FSDP gathers)
+    bf16-params  parameters stored bf16
+    remat-none   disable activation rematerialization
+    """
+    dp = dp_axes(mesh)
+    dp_total = int(np.prod([mesh.shape[a] for a in dp]))
+    gb, S = shape["global_batch"], shape["seq_len"]
+    seqs_per_dev = 4 if "micro4" in opts else 1
+    micro = min(dp_total * seqs_per_dev, gb)
+    n_micro = max(gb // micro, 1)
+    if "bf16-params" in opts:
+        cfg = dataclasses.replace(cfg, param_dtype="bfloat16")
+    if "remat-none" in opts:
+        cfg = dataclasses.replace(cfg, remat="none")
+    if "uneven-heads" in opts:
+        cfg = dataclasses.replace(cfg, seq_shard_attn=False)
+
+    model = build_model(cfg, mesh)
+    opt = AdamWConfig(
+        moment_dtype=cfg.moment_dtype, factored=cfg.factored_second_moment
+    )
+    train_step = make_train_step(model, opt)
+
+    state_shape = jax.eval_shape(
+        lambda k: init_state(model, k, opt), jax.random.PRNGKey(0)
+    )
+    fsdp_kw = {"fsdp": ()} if "no-fsdp" in opts else {}
+    if "uneven-heads" in opts:
+        fsdp_kw["uneven_heads"] = True
+    pspecs = param_specs(state_shape.params, mesh, **fsdp_kw)
+    from ..training.sharding import opt_state_specs
+
+    ospecs = opt_state_specs(
+        jax.tree_util.tree_map(lambda x: x, state_shape.opt), pspecs
+    )
+    sh = lambda spec_tree: jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    state_shardings = TrainState(
+        params=sh(pspecs), opt=sh(ospecs), step=NamedSharding(mesh, P())
+    )
+    state_sds = _tree_sds(state_shape, state_shardings)
+
+    batch_sds = {
+        "tokens": _sds((n_micro, micro, S), jnp.int32, mesh, P(None, dp, None)),
+        "targets": _sds((n_micro, micro, S), jnp.int32, mesh, P(None, dp, None)),
+    }
+    for k, (bshape, dt, spec) in _extras_specs(
+        cfg, micro, mesh, dp, micro_axis=True
+    ).items():
+        batch_sds[k] = _sds((n_micro, *bshape), dt, mesh, spec)
+
+    jitted = jax.jit(
+        train_step,
+        out_shardings=(state_shardings, None),
+        donate_argnums=(0,),
+    )
+    return jitted, (state_sds, batch_sds)
+
+
+def _param_sds(cfg, mesh, opts=()):
+    if "bf16-params" in opts:
+        cfg = dataclasses.replace(cfg, param_dtype="bfloat16")
+    if "uneven-heads" in opts:
+        cfg = dataclasses.replace(cfg, seq_shard_attn=False)
+    if "where-update" in opts:
+        cfg = dataclasses.replace(cfg, decode_cache_update="where")
+    if "flash-decode" in opts:
+        cfg = dataclasses.replace(cfg, flash_decode=True)
+    model = build_model(cfg, mesh)
+    pshape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    fsdp_kw = {"fsdp": ()} if "no-fsdp" in opts else {}
+    if "fsdp-tables-only" in opts:
+        fsdp_kw["fsdp_tables_only"] = True
+    if "uneven-heads" in opts:
+        fsdp_kw["uneven_heads"] = True
+    pspecs = param_specs(pshape, mesh, **fsdp_kw)
+    shardings = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), pspecs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    return model, _tree_sds(pshape, shardings)
+
+
+def build_prefill_cell(cfg, shape, mesh, opts=()):
+    dp = dp_axes(mesh)
+    gb, S = shape["global_batch"], shape["seq_len"]
+    model, params_sds = _param_sds(cfg, mesh, opts)
+
+    tokens_sds = _sds((gb, S), jnp.int32, mesh, P(dp, None))
+    extras_sds = {
+        k: _sds(bshape, dt, mesh, spec)
+        for k, (bshape, dt, spec) in _extras_specs(
+            cfg, gb, mesh, dp, micro_axis=False
+        ).items()
+    }
+
+    cache_shape = jax.eval_shape(lambda: model.cache_struct(gb, S))
+    cspecs = cache_specs(cache_shape, mesh, batch_sharded=True, dp_axes=dp)
+    cache_sh = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), cspecs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+    def prefill(params, tokens, extras):
+        return model.prefill(params, tokens, extras, s_max=S)
+
+    jitted = jax.jit(prefill, out_shardings=(None, cache_sh))
+    return jitted, (params_sds, tokens_sds, extras_sds)
+
+
+def build_decode_cell(cfg, shape, mesh, opts=()):
+    dp = dp_axes(mesh)
+    dp_total = int(np.prod([mesh.shape[a] for a in dp]))
+    gb, S = shape["global_batch"], shape["seq_len"]
+    model, params_sds = _param_sds(cfg, mesh, opts)
+
+    batch_sharded = gb % dp_total == 0 and gb >= dp_total
+    cache_shape = jax.eval_shape(lambda: model.cache_struct(gb, S))
+    cspecs = cache_specs(cache_shape, mesh, batch_sharded=batch_sharded, dp_axes=dp)
+    cache_sh = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), cspecs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    cache_sds = _tree_sds(cache_shape, cache_sh)
+    token_sds = _sds((gb,), jnp.int32, mesh, P(dp) if batch_sharded else P())
+    pos_sds = _sds((), jnp.int32, mesh, P())
+
+    jitted = jax.jit(
+        model.decode_step,
+        out_shardings=(None, cache_sh),
+        donate_argnums=(1,),
+    )
+    return jitted, (params_sds, cache_sds, token_sds, pos_sds)
+
+
+def build_prf_cell(mesh, opts=(), *, n_samples=2 ** 22, n_features=4096,
+                   n_classes=16):
+    """The paper's own workload at production scale (extra dry-run row).
+
+    opts: prf-packed (class-packed segment ids), prf-rs (reduce-scatter
+    T_GR combine) — the §Perf hillclimb knobs.
+    """
+    from ..core.distributed import make_prf_train_fn
+    from ..core.types import ForestConfig
+
+    dp = dp_axes(mesh)
+    cfg = ForestConfig(
+        n_trees=64, max_depth=12, n_bins=64, n_classes=n_classes,
+        max_frontier=16, tree_chunk=8, feature_mode="importance",
+        packed_hist="prf-packed" in opts,
+        hist_reduce="psum_scatter" if "prf-rs" in opts else "psum",
+    )
+    train_fn, _ = make_prf_train_fn(
+        cfg, mesh, sample_axes=dp, feature_axis="model"
+    )
+    xb = _sds((n_samples, n_features), jnp.uint8, mesh, P(dp, "model"))
+    y = _sds((n_samples,), jnp.int32, mesh, P(dp))
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32,
+                               sharding=NamedSharding(mesh, P()))
+    return train_fn, (xb, y, key), cfg
+
+
+PRF_MODEL_FLOPS = None  # PRF has no 6ND analogue; report HLO flops only.
+
+
+# ---------------------------------------------------------------------------
+# Runner
+# ---------------------------------------------------------------------------
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: Optional[str] = None, opts=()) -> Dict[str, Any]:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = int(np.prod(list(mesh.devices.shape)))
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    result: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name, "devices": n_dev,
+        "opts": list(opts),
+    }
+
+    t0 = time.time()
+    try:
+        if arch == "prf":
+            fn, args, _prf_cfg = build_prf_cell(mesh, opts)
+            mf = 0.0
+        else:
+            cfg = get_config(arch)
+            shape = SHAPES[shape_name]
+            if shape_name == "long_500k" and not cfg.sub_quadratic:
+                result["status"] = "SKIP(full-attn)"
+                return result
+            builder = {
+                "train": build_train_cell,
+                "prefill": build_prefill_cell,
+                "decode": build_decode_cell,
+            }[shape["kind"]]
+            fn, args = builder(cfg, shape, mesh, opts)
+            mf = model_flops_global(cfg, shape) / n_dev
+
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        t1 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t1
+
+        analysis = analyze_compiled(compiled)
+        terms = roofline_terms(analysis, model_flops_per_device=mf)
+        mem = analysis["memory"]
+        # memory_analysis() reports per-device numbers for SPMD modules;
+        # peak = live args + temps at the high-water mark.
+        per_dev_bytes = mem.get("peak_bytes", 0) or (
+            mem.get("argument_bytes", 0) + mem.get("temp_bytes", 0)
+        )
+        result.update(
+            status="OK",
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            flops_per_device=analysis["flops"],
+            bytes_per_device=analysis["bytes_accessed"],
+            collective_bytes=analysis["collective_bytes"],
+            collectives={
+                k: {kk: int(vv) for kk, vv in v.items()}
+                for k, v in analysis["collectives"].items()
+            },
+            memory=mem,
+            hbm_per_device_gb=round(per_dev_bytes / 2 ** 30, 3),
+            fits_hbm=bool(per_dev_bytes < HW["hbm_bytes"]),
+            **{k: v for k, v in terms.items()},
+        )
+    except Exception as e:
+        result["status"] = f"FAIL: {type(e).__name__}: {e}"
+        result["traceback"] = traceback.format_exc()[-2000:]
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = ("~" + "~".join(sorted(opts))) if opts else ""
+        fname = f"{arch}__{shape_name}__{mesh_name}{tag}.json"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            json.dump(result, f, indent=2, default=str)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default="all",
+                    help="arch name, 'prf', or 'all'")
+    ap.add_argument("--shape", default="all", help="shape name or 'all'")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--opt", default="",
+                    help="comma-sep §Perf knobs: no-fsdp,micro4,bf16-params,"
+                         "remat-none,prf-packed,prf-rs")
+    args = ap.parse_args()
+    opts = tuple(o for o in args.opt.split(",") if o)
+
+    archs = (
+        list(all_configs().keys()) + ["prf"] if args.arch == "all" else [args.arch]
+    )
+    shapes = list(SHAPES.keys()) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    any_fail = False
+    for arch in archs:
+        arch_shapes = ["train_4k"] if arch == "prf" else shapes
+        for shape in arch_shapes:
+            for mp in meshes:
+                r = run_cell(arch, shape, mp, args.out, opts)
+                line = (
+                    f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:8s} "
+                    f"{r['status']:18s}"
+                )
+                if r["status"] == "OK":
+                    line += (
+                        f" compile={r['compile_s']:7.1f}s"
+                        f" hbm/dev={r['hbm_per_device_gb']:7.3f}GB"
+                        f" dom={r['dominant']:12s}"
+                        f" frac={r['roofline_fraction']:.3f}"
+                    )
+                else:
+                    any_fail = any_fail or r["status"].startswith("FAIL")
+                print(line, flush=True)
+    raise SystemExit(1 if any_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

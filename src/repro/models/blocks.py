@@ -1,0 +1,325 @@
+"""Per-layer-kind block assembly (pre-norm residual blocks).
+
+Kinds:
+  dense / local / global   self-attention (+window/theta variants) + MLP
+  moe                      self-attention + MoE FFN (shared + routed)
+  ssm                      Mamba-2 block (no MLP when d_ff == 0)
+  hybrid                   parallel attention + Mamba heads (Hymba) + MLP
+  cross                    cross-attention to vision embeddings + MLP
+  enc / dec                whisper encoder / decoder blocks
+
+``block_init(kind, key, cfg)`` builds params; ``block_apply`` runs one of
+three modes: "train" (full seq, no cache), "prefill" (full seq -> cache),
+"decode" (one token + cache). The ``Ctx`` carries everything modal.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from . import mamba as mb
+from . import mla
+from . import moe as moe_mod
+from .layers import (
+    Params, attention_decode, attention_prefill, attention_train,
+    causal_mask, gqa_attend, init_attention, init_mlp, init_rmsnorm,
+    mlp_apply, rmsnorm, rope_apply, _qkv, _kv_for_cross, attn_out,
+)
+
+
+@dataclasses.dataclass
+class Ctx:
+    """Modal context threaded through block_apply."""
+    cfg: ArchConfig
+    mode: str                          # train | prefill | decode
+    positions: Optional[jnp.ndarray] = None   # [S] or [B, S]
+    pos: Optional[jnp.ndarray] = None         # decode: scalar position
+    s_max: int = 0                            # cache capacity
+    cross_src: Optional[jnp.ndarray] = None   # vision / encoder output
+    mesh: Any = None                          # for shard_map EP
+    meta: Optional[jnp.ndarray] = None        # hymba meta tokens [M, D]
+
+
+def _kind_attn_args(kind: str, cfg: ArchConfig):
+    window = cfg.local_window if kind in ("local", "hybrid") else 0
+    theta = (
+        cfg.rope_theta_global
+        if (kind == "global" and cfg.rope_theta_global)
+        else cfg.rope_theta
+    )
+    return window, theta
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def block_init(kind: str, key, cfg: ArchConfig) -> Params:
+    ks = jax.random.split(key, 4)
+    D = cfg.d_model
+    if kind in ("dense", "local", "global"):
+        ff = cfg.dense_d_ff if (cfg.n_experts and cfg.dense_d_ff) else cfg.d_ff
+        return {
+            "ln1": init_rmsnorm(D), "attn": init_attention(ks[0], cfg),
+            "ln2": init_rmsnorm(D), "mlp": init_mlp(ks[1], D, ff, cfg.act),
+        }
+    if kind == "moe":
+        p = {
+            "ln1": init_rmsnorm(D),
+            "ln2": init_rmsnorm(D),
+            "moe": moe_mod.init_moe(ks[1], cfg),
+        }
+        p["attn"] = mla.init_mla(ks[0], cfg) if cfg.use_mla else init_attention(ks[0], cfg)
+        return p
+    if kind == "ssm":
+        return {"ln1": init_rmsnorm(D), "ssm": mb.init_mamba(ks[0], cfg)}
+    if kind == "hybrid":
+        return {
+            "ln1": init_rmsnorm(D),
+            "attn": init_attention(ks[0], cfg),
+            "ssm": mb.init_mamba(ks[1], cfg),
+            "attn_norm": init_rmsnorm(D),
+            "ssm_norm": init_rmsnorm(D),
+            "gate_attn": jnp.ones((D,), jnp.float32) * 0.5,
+            "gate_ssm": jnp.ones((D,), jnp.float32) * 0.5,
+            "ln2": init_rmsnorm(D),
+            "mlp": init_mlp(ks[2], D, cfg.d_ff, cfg.act),
+        }
+    if kind == "cross":
+        return {
+            "ln1": init_rmsnorm(D), "attn": init_attention(ks[0], cfg),
+            "ln2": init_rmsnorm(D), "mlp": init_mlp(ks[1], D, cfg.d_ff, cfg.act),
+            "xgate": jnp.zeros((D,), jnp.float32),   # llama-vision gated x-attn
+        }
+    if kind == "enc":
+        return {
+            "ln1": init_rmsnorm(D), "attn": init_attention(ks[0], cfg),
+            "ln2": init_rmsnorm(D), "mlp": init_mlp(ks[1], D, cfg.d_ff, cfg.act),
+        }
+    if kind == "dec":
+        return {
+            "ln1": init_rmsnorm(D), "attn": init_attention(ks[0], cfg),
+            "lnx": init_rmsnorm(D), "xattn": init_attention(ks[1], cfg),
+            "ln2": init_rmsnorm(D), "mlp": init_mlp(ks[2], D, cfg.d_ff, cfg.act),
+        }
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# attention with optional meta-token prefix (hymba)
+# ---------------------------------------------------------------------------
+
+
+def _self_attn(p, x, ctx: Ctx, kind: str, cache=None):
+    """Returns (out, new_cache or None)."""
+    cfg = ctx.cfg
+    window, theta = _kind_attn_args(kind, cfg)
+    M = cfg.meta_tokens if kind == "hybrid" else 0
+
+    if ctx.mode == "decode":
+        out, new_cache = attention_decode(
+            p, x, ctx.pos + M, cache, cfg, window=window, theta=theta, prefix=M,
+            mesh=ctx.mesh,
+        )
+        return out, new_cache
+
+    if M:
+        from .layers import MaskSpec, _auto_q_chunk, roll_to_window
+
+        meta = jnp.broadcast_to(
+            ctx.meta[None].astype(x.dtype), (x.shape[0],) + ctx.meta.shape
+        )
+        src = jnp.concatenate([meta, x], axis=1)
+        positions = jnp.arange(src.shape[1])
+        q, _, _ = _qkv(p, x, cfg)
+        q = rope_apply(q, positions[M:], theta)
+        _, k, v = _qkv(p, src, cfg)
+        k = rope_apply(k, positions, theta)
+        from .layers import seq_shard_qkv
+
+        qs, ks, vs = seq_shard_qkv(q, k, v, ctx.mesh, cfg.n_heads, enabled=cfg.seq_shard_attn)
+        S = x.shape[1]
+        spec = MaskSpec(causal=True, window=window, prefix=M, offset=M)
+        o = gqa_attend(qs, ks, vs, mask_spec=spec, q_chunk=_auto_q_chunk(S))
+        out = attn_out(p, o)
+        if ctx.mode == "prefill":
+            if window > 0:  # meta prefix + rolling window buffer
+                k = jnp.concatenate(
+                    [k[:, :M], roll_to_window(k[:, M:], window)], axis=1
+                )
+                v = jnp.concatenate(
+                    [v[:, :M], roll_to_window(v[:, M:], window)], axis=1
+                )
+            else:
+                pad = ctx.s_max + M - k.shape[1]
+                k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            return out, {"k": k, "v": v}
+        return out, None
+
+    if ctx.mode == "train":
+        return attention_train(
+            p, x, ctx.positions, cfg, window=window, theta=theta, mesh=ctx.mesh
+        ), None
+    out, kv = attention_prefill(
+        p, x, ctx.positions, cfg, window=window, theta=theta, s_max=ctx.s_max,
+        mesh=ctx.mesh,
+    )
+    return out, kv
+
+
+def _cross_attn(p, x, ctx: Ctx, cache=None):
+    """Cross attention; KV from ctx.cross_src (train/prefill) or cache."""
+    cfg = ctx.cfg
+    if ctx.mode == "decode":
+        out, _ = attention_decode(p, x, ctx.pos, cache, cfg, cross=True)
+        return out, cache
+    out = attention_train(
+        p, x, ctx.positions, cfg, cross_src=ctx.cross_src, mesh=ctx.mesh
+    )
+    if ctx.mode == "prefill":
+        k, v = _kv_for_cross(p, ctx.cross_src, cfg)
+        return out, {"k": k, "v": v}
+    return out, None
+
+
+# ---------------------------------------------------------------------------
+# apply
+# ---------------------------------------------------------------------------
+
+
+def block_apply(kind: str, p: Params, x, ctx: Ctx, cache=None):
+    """Returns (x, new_cache, aux_loss)."""
+    cfg = ctx.cfg
+    aux = jnp.zeros((), jnp.float32)
+
+    if kind in ("dense", "local", "global"):
+        a, kv = _self_attn(p["attn"], rmsnorm(p["ln1"], x), ctx, kind, cache)
+        x = x + a
+        x = x + mlp_apply(p["mlp"], rmsnorm(p["ln2"], x), cfg.act)
+        return x, kv, aux
+
+    if kind == "moe":
+        h = rmsnorm(p["ln1"], x)
+        if cfg.use_mla:
+            if ctx.mode == "train":
+                a, kv = mla.mla_train(p["attn"], h, ctx.positions, cfg), None
+            elif ctx.mode == "prefill":
+                a, kv = mla.mla_prefill(p["attn"], h, ctx.positions, cfg, s_max=ctx.s_max)
+            else:
+                a, kv = mla.mla_decode(p["attn"], h, ctx.pos, cache, cfg)
+        else:
+            a, kv = _self_attn(p["attn"], h, ctx, "dense", cache)
+        x = x + a
+        h2 = rmsnorm(p["ln2"], x)
+        dp_ok = False
+        if ctx.mesh is not None:
+            _dp = [ctx.mesh.shape[a] for a in ctx.mesh.axis_names if a != "model"]
+            _dpt = 1
+            for s in _dp:
+                _dpt *= s
+            dp_ok = h2.shape[0] % _dpt == 0
+        if cfg.ep_mode == "shard_map" and ctx.mesh is not None and dp_ok:
+            from jax.sharding import PartitionSpec as P
+
+            dp = tuple(a for a in ctx.mesh.axis_names if a != "model")
+
+            def _moe_kernel(px, hx):
+                yk, auxk = moe_mod.moe_apply_shard_map(px, hx, cfg)
+                return yk, jax.lax.pmean(auxk, dp)   # replicate across DP shards
+
+            y, aux = jax.shard_map(
+                _moe_kernel,
+                mesh=ctx.mesh,
+                in_specs=(_moe_param_specs(p["moe"]), P(dp, None, None)),
+                out_specs=(P(dp, None, None), P()),
+                check_vma=False,
+            )(p["moe"], h2)
+        else:
+            y, aux = moe_mod.moe_apply_gspmd(p["moe"], h2, cfg)
+        return x + y, kv, aux
+
+    if kind == "ssm":
+        h = rmsnorm(p["ln1"], x)
+        if ctx.mode == "train":
+            y, st = mb.mamba_train(p["ssm"], h, cfg), None
+        elif ctx.mode == "prefill":
+            y, st = mb.mamba_prefill(p["ssm"], h, cfg)
+        else:
+            y, st = mb.mamba_decode(p["ssm"], h, cache, cfg)
+        return x + y, st, aux
+
+    if kind == "hybrid":
+        h = rmsnorm(p["ln1"], x)
+        c_attn = cache["attn"] if cache is not None else None
+        c_ssm = cache["ssm"] if cache is not None else None
+        a, kv = _self_attn(p["attn"], h, ctx, "hybrid", c_attn)
+        if ctx.mode == "train":
+            s, st = mb.mamba_train(p["ssm"], h, cfg), None
+        elif ctx.mode == "prefill":
+            s, st = mb.mamba_prefill(p["ssm"], h, cfg)
+        else:
+            s, st = mb.mamba_decode(p["ssm"], h, c_ssm, cfg)
+        y = (
+            p["gate_attn"].astype(x.dtype) * rmsnorm(p["attn_norm"], a)
+            + p["gate_ssm"].astype(x.dtype) * rmsnorm(p["ssm_norm"], s)
+        )
+        x = x + y
+        x = x + mlp_apply(p["mlp"], rmsnorm(p["ln2"], x), cfg.act)
+        new_cache = None
+        if kv is not None or st is not None:
+            new_cache = {"attn": kv, "ssm": st}
+        return x, new_cache, aux
+
+    if kind == "cross":
+        a, kv = _cross_attn(p["attn"], rmsnorm(p["ln1"], x), ctx, cache)
+        x = x + jnp.tanh(p["xgate"]).astype(x.dtype) * a
+        x = x + mlp_apply(p["mlp"], rmsnorm(p["ln2"], x), cfg.act)
+        return x, kv, aux
+
+    if kind == "enc":
+        h = rmsnorm(p["ln1"], x)
+        q, k, v = _qkv(p["attn"], h, cfg)
+        o = gqa_attend(q, k, v, mask=None)                      # bidirectional
+        x = x + attn_out(p["attn"], o)
+        x = x + mlp_apply(p["mlp"], rmsnorm(p["ln2"], x), cfg.act)
+        return x, None, aux
+
+    if kind == "dec":
+        c_self = cache["self"] if cache is not None else None
+        c_cross = cache["cross"] if cache is not None else None
+        a, kv = _self_attn(p["attn"], rmsnorm(p["ln1"], x), ctx, "dense", c_self)
+        x = x + a
+        a2, xkv = _cross_attn(p["xattn"], rmsnorm(p["lnx"], x), ctx, c_cross)
+        x = x + a2
+        x = x + mlp_apply(p["mlp"], rmsnorm(p["ln2"], x), cfg.act)
+        new_cache = None
+        if kv is not None or xkv is not None:
+            new_cache = {"self": kv, "cross": xkv}
+        return x, new_cache, aux
+
+    raise ValueError(kind)
+
+
+def _moe_param_specs(moe_params):
+    """PartitionSpecs for the inner-shard_map MoE call: experts sharded on
+    their leading axis over `model`, router/shared replicated."""
+    from jax.sharding import PartitionSpec as P
+
+    def spec(path_leaf):
+        return path_leaf
+
+    specs = {}
+    for name, sub in moe_params.items():
+        if name == "experts":
+            specs[name] = {k: P("model") for k in sub}
+        elif name == "shared":
+            specs[name] = {k: P() for k in sub}
+        else:
+            specs[name] = P()
+    return specs

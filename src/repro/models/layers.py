@@ -1,0 +1,473 @@
+"""Model primitives: norms, rotary embeddings, MLPs, GQA attention.
+
+Functional style: ``init_*`` builds param dicts, ``*_apply`` consumes
+them. Per-layer params are later stacked on a leading layer axis and
+driven by ``lax.scan`` (keeps HLO size flat in depth — critical for the
+512-device dry-run compiles).
+
+Attention avoids materializing repeated KV heads (GQA runs as grouped
+einsum) and does softmax in fp32. The Pallas flash kernel
+(kernels/flash_attention) is the TPU drop-in for the same contraction;
+the einsum path is used under jit so SPMD partitioning and
+cost_analysis stay exact.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+
+Params = Dict[str, Any]
+
+
+def _dense_init(key, shape, scale=None):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    scale = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * scale)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(d: int) -> Params:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(p: Params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_apply(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x [..., S, H, hd] (hd even), positions broadcastable to [..., S]."""
+    if theta <= 0:
+        return x
+    hd = x.shape[-1]
+    freqs = theta ** (-jnp.arange(0, hd, 2, dtype=jnp.float32) / hd)   # [hd/2]
+    ang = positions[..., :, None].astype(jnp.float32) * freqs          # [..., S, hd/2]
+    cos = jnp.cos(ang)[..., None, :]                                   # [..., S, 1, hd/2]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d: int, f: int, act: str) -> Params:
+    ks = jax.random.split(key, 3)
+    p = {"w2": _dense_init(ks[1], (f, d))}
+    if act in ("swiglu", "geglu"):
+        p["w1"] = _dense_init(ks[0], (d, f))
+        p["w3"] = _dense_init(ks[2], (d, f))
+    else:
+        p["w1"] = _dense_init(ks[0], (d, f))
+    return p
+
+
+def mlp_apply(p: Params, x: jnp.ndarray, act: str) -> jnp.ndarray:
+    h = x @ p["w1"].astype(x.dtype)
+    if act == "swiglu":
+        h = jax.nn.silu(h) * (x @ p["w3"].astype(x.dtype))
+    elif act == "geglu":
+        h = jax.nn.gelu(h) * (x @ p["w3"].astype(x.dtype))
+    else:
+        h = jax.nn.gelu(h)
+    return h @ p["w2"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, optional bias / qk-norm / window / cross)
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ArchConfig) -> Params:
+    D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": _dense_init(ks[0], (D, H, hd)),
+        "wk": _dense_init(ks[1], (D, KV, hd)),
+        "wv": _dense_init(ks[2], (D, KV, hd)),
+        "wo": _dense_init(ks[3], (H, hd, D), scale=(H * hd) ** -0.5),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H, hd), jnp.float32)
+        p["bk"] = jnp.zeros((KV, hd), jnp.float32)
+        p["bv"] = jnp.zeros((KV, hd), jnp.float32)
+    if cfg.qk_norm:
+        p["qnorm"] = init_rmsnorm(hd)
+        p["knorm"] = init_rmsnorm(hd)
+    return p
+
+
+def _qkv(p: Params, x: jnp.ndarray, cfg: ArchConfig):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    if "qnorm" in p:
+        q = rmsnorm(p["qnorm"], q)
+        k = rmsnorm(p["knorm"], k)
+    return q, k, v
+
+
+def _kv_for_cross(p: Params, src: jnp.ndarray, cfg: ArchConfig):
+    k = jnp.einsum("bsd,dhk->bshk", src, p["wk"].astype(src.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", src, p["wv"].astype(src.dtype))
+    if "bk" in p:
+        k = k + p["bk"].astype(src.dtype)
+        v = v + p["bv"].astype(src.dtype)
+    if "knorm" in p:
+        k = rmsnorm(p["knorm"], k)
+    return k, v
+
+
+@dataclasses.dataclass(frozen=True)
+class MaskSpec:
+    """Parametric attention mask — built per query block, never at [Sq, Sk]."""
+    causal: bool = True
+    window: int = 0
+    prefix: int = 0      # first `prefix` key positions always visible (meta)
+    offset: int = 0      # qpos = q_index + offset (ends-aligned: Sk - Sq)
+
+    def block(self, q0, qc: int, sk: int) -> jnp.ndarray:
+        qpos = (jnp.arange(qc) + q0 + self.offset)[:, None]
+        kpos = jnp.arange(sk)[None, :]
+        m = jnp.ones((qc, sk), bool)
+        if self.causal:
+            m &= kpos <= qpos
+        if self.window > 0:
+            m &= kpos > qpos - self.window
+        if self.prefix > 0:
+            m |= kpos < self.prefix
+        return m[None]
+
+
+def gqa_attend(
+    q: jnp.ndarray,      # [B, Sq, H, hd]
+    k: jnp.ndarray,      # [B, Sk, KV, hd]
+    v: jnp.ndarray,      # [B, Sk, KV, hd]
+    *,
+    mask: Optional[jnp.ndarray] = None,        # explicit [B or 1, Sq, Sk]
+    mask_spec: Optional[MaskSpec] = None,      # or parametric
+    q_chunk: int = 0,
+) -> jnp.ndarray:
+    """GQA attention. KV heads are repeated to H so the head axis (which
+    all archs make TP-divisible, or GSPMD pads) carries the sharding; the
+    repeat is a gather of the small KV tensor — each shard materializes
+    only its own heads.
+
+    ``q_chunk``: scan over query blocks so [Sq, Sk] logits never exist at
+    full size (exact — every block still sees all keys).
+    """
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    if KV != H:
+        G = H // KV
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    Sk = k.shape[1]
+
+    def attend_block(qb, q0):
+        logits = jnp.einsum(
+            "bqhd,bshd->bhqs", qb.astype(jnp.float32), k.astype(jnp.float32)
+        ) * (hd ** -0.5)                                 # [B, H, qc, Sk]
+        if mask_spec is not None:
+            m = mask_spec.block(q0, qb.shape[1], Sk)
+            logits = jnp.where(m[:, None], logits, -1e30)
+        elif mask is not None:
+            logits = jnp.where(mask[:, None], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bhqs,bshd->bqhd", probs, v.astype(jnp.float32))
+        return out.astype(q.dtype)
+
+    if q_chunk and Sq > q_chunk and Sq % q_chunk == 0 and mask is None:
+        nq = Sq // q_chunk
+        qs = jnp.moveaxis(q.reshape(B, nq, q_chunk, H, hd), 1, 0)
+        out = jax.lax.map(
+            lambda t: attend_block(t[0], t[1] * q_chunk),
+            (qs, jnp.arange(nq)),
+        )
+        return jnp.moveaxis(out, 0, 1).reshape(B, Sq, H, hd)
+    return attend_block(q, 0)
+
+
+def causal_mask(sq: int, sk: int, window: int = 0) -> jnp.ndarray:
+    """[1, Sq, Sk] bool; ends aligned (Sk >= Sq)."""
+    qpos = jnp.arange(sq)[:, None] + (sk - sq)
+    kpos = jnp.arange(sk)[None, :]
+    m = kpos <= qpos
+    if window > 0:
+        m &= kpos > qpos - window
+    return m[None]
+
+
+def decode_mask(
+    pos: jnp.ndarray, s_max: int, window: int = 0, prefix: int = 0
+) -> jnp.ndarray:
+    """[1, 1, S_max] bool for a single new token at position `pos`.
+
+    ``prefix`` positions (meta tokens) stay visible regardless of window.
+    """
+    kpos = jnp.arange(s_max)[None, None, :]
+    m = kpos <= pos
+    if window > 0:
+        m &= kpos > pos - window
+    if prefix > 0:
+        m |= kpos < prefix
+    return m
+
+
+def attn_out(p: Params, o: jnp.ndarray) -> jnp.ndarray:
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(o.dtype))
+
+
+def _auto_q_chunk(sq: int) -> int:
+    """Chunk queries once [Sq, Sk] logits would dominate memory."""
+    return 512 if sq > 8192 else 0
+
+
+def seq_shard_qkv(q, k, v, mesh, n_heads: int, tp: str = "model",
+                  enabled: bool = True):
+    """Context-parallel attention layout for head counts that do not
+    divide TP (smollm 9H, qwen 20H, hymba 25H, whisper 20H on tp=16):
+    shard the *query sequence* over `model` and replicate K/V (small for
+    GQA). Without this, GSPMD replicates the whole attention across the
+    model axis — a silent tp-fold compute waste. Heads that do divide TP
+    keep the classic head sharding (driven by the wq/wk specs)."""
+    if mesh is None or tp not in mesh.axis_names or not enabled:
+        return q, k, v
+    tp_size = mesh.shape[tp]
+    if n_heads % tp_size == 0:
+        return q, k, v
+    if q.shape[1] % tp_size != 0:   # decode (Sq=1): cache length sharding handles it
+        return q, k, v
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    dp = tuple(a for a in mesh.axis_names if a != tp)
+    if q.shape[0] % int(np.prod([mesh.shape[a] for a in dp])) != 0:
+        dp = ()
+    wsc = jax.lax.with_sharding_constraint
+    q = wsc(q, NamedSharding(mesh, P(dp or None, tp, None, None)))
+    k = wsc(k, NamedSharding(mesh, P(dp or None, None, None, None)))
+    v = wsc(v, NamedSharding(mesh, P(dp or None, None, None, None)))
+    return q, k, v
+
+
+def attention_train(
+    p: Params, x: jnp.ndarray, positions: jnp.ndarray, cfg: ArchConfig,
+    *, window: int = 0, theta: Optional[float] = None,
+    cross_src: Optional[jnp.ndarray] = None, mesh=None,
+) -> jnp.ndarray:
+    """Full-sequence attention (training / prefill compute)."""
+    theta = cfg.rope_theta if theta is None else theta
+    if cross_src is None:
+        q, k, v = _qkv(p, x, cfg)
+        q = rope_apply(q, positions, theta)
+        k = rope_apply(k, positions, theta)
+        q, k, v = seq_shard_qkv(q, k, v, mesh, cfg.n_heads, enabled=cfg.seq_shard_attn)
+        spec = MaskSpec(causal=True, window=window, offset=0)
+        o = gqa_attend(q, k, v, mask_spec=spec, q_chunk=_auto_q_chunk(x.shape[1]))
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+        if "bq" in p:
+            q = q + p["bq"].astype(x.dtype)
+        if "qnorm" in p:
+            q = rmsnorm(p["qnorm"], q)
+        k, v = _kv_for_cross(p, cross_src, cfg)
+        q, k, v = seq_shard_qkv(q, k, v, mesh, cfg.n_heads, enabled=cfg.seq_shard_attn)
+        o = gqa_attend(q, k, v, q_chunk=_auto_q_chunk(x.shape[1]))  # dense
+    return attn_out(p, o)
+
+
+def roll_to_window(k: jnp.ndarray, window: int) -> jnp.ndarray:
+    """Compress a full prefill KV [B, S, ...] into a rolling buffer [B, W, ...]
+    where position p lives at slot p % W (matching decode updates)."""
+    S = k.shape[1]
+    if S < window:
+        pad = [(0, 0)] * k.ndim
+        pad[1] = (0, window - S)
+        return jnp.pad(k, pad)
+    last = k[:, S - window :]
+    return jnp.roll(last, shift=(S - window) % window, axis=1)
+
+
+def attention_prefill(p, x, positions, cfg, *, window=0, theta=None, s_max=None,
+                      mesh=None):
+    """Like train, but also returns the KV cache.
+
+    Full-attention layers pad the cache to ``s_max``; windowed layers
+    return a rolling buffer of length ``window`` (position p at slot
+    p % W) — the cache never exceeds the attention horizon.
+    """
+    theta = cfg.rope_theta if theta is None else theta
+    q, k, v = _qkv(p, x, cfg)
+    q = rope_apply(q, positions, theta)
+    k = rope_apply(k, positions, theta)
+    qs, ks, vs = seq_shard_qkv(q, k, v, mesh, cfg.n_heads, enabled=cfg.seq_shard_attn)
+    spec = MaskSpec(causal=True, window=window, offset=0)
+    o = gqa_attend(qs, ks, vs, mask_spec=spec, q_chunk=_auto_q_chunk(x.shape[1]))
+    if window > 0:
+        k = roll_to_window(k, window)
+        v = roll_to_window(v, window)
+    else:
+        s_max = s_max or x.shape[1]
+        pad = s_max - x.shape[1]
+        if pad:
+            k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return attn_out(p, o), {"k": k, "v": v}
+
+
+def _pin_cache_layout(arr, mesh, length_axis: int = 1):
+    """flash-decode: constrain a cache tensor to its natural
+    (batch->dp, length->model) layout so GSPMD computes softmax partials
+    per length shard instead of all-gathering the cache (§Perf)."""
+    if mesh is None or "model" not in mesh.axis_names:
+        return arr
+    if arr.shape[length_axis] % mesh.shape["model"] != 0:
+        return arr
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    dp = tuple(a for a in mesh.axis_names if a != "model")
+    dp_total = int(np.prod([mesh.shape[a] for a in dp]))
+    b = dp if arr.shape[0] % dp_total == 0 and arr.shape[0] >= dp_total else None
+    spec = [b, None if length_axis != 1 else "model"] + [None] * (arr.ndim - 2)
+    spec[length_axis] = "model"
+    return jax.lax.with_sharding_constraint(arr, NamedSharding(mesh, P(*spec)))
+
+
+def attention_decode(
+    p: Params, x: jnp.ndarray, pos: jnp.ndarray, cache: Params, cfg: ArchConfig,
+    *, window: int = 0, theta: Optional[float] = None,
+    cross: bool = False, prefix: int = 0, mesh=None,
+):
+    """One-token step. x [B, 1, D].
+
+    Full-attention cache: k/v [B, S_max, KV, hd], write at `pos`.
+    Windowed cache:       k/v [B, W, KV, hd] rolling, write at pos % W.
+    ``prefix`` meta tokens occupy [0, prefix) of a (prefix + W) buffer.
+    """
+    theta = cfg.rope_theta if theta is None else theta
+    if cross:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+        if "bq" in p:
+            q = q + p["bq"].astype(x.dtype)
+        if "qnorm" in p:
+            q = rmsnorm(p["qnorm"], q)
+        o = gqa_attend(q, cache["k"], cache["v"], mask=None)
+        return attn_out(p, o), cache
+    q, k_new, v_new = _qkv(p, x, cfg)
+    q = rope_apply(q, pos[None, None], theta)            # single position
+    k_new = rope_apply(k_new, pos[None, None], theta)
+    if window > 0:
+        # Rolling buffer: every resident slot is inside the window by
+        # construction; mask only not-yet-filled slots (and keep meta
+        # prefix slots always visible).
+        slot = prefix + (pos - prefix) % window if prefix else pos % window
+        kpos = jnp.arange(cache["k"].shape[1])[None, None, :]
+        mask = (kpos < prefix) | (kpos <= pos)
+    else:
+        slot = pos
+        mask = decode_mask(pos, cache["k"].shape[1], 0, prefix)
+    k = cache_write(cache["k"], k_new, slot, cfg.decode_cache_update)
+    v = cache_write(cache["v"], v_new, slot, cfg.decode_cache_update)
+    if cfg.flash_decode:
+        k = _pin_cache_layout(k, mesh)
+        v = _pin_cache_layout(v, mesh)
+    o = grouped_attend_one(q, k, v, mask=mask)
+    return attn_out(p, o), {"k": k, "v": v}
+
+
+def grouped_attend_one(q, k, v, *, mask):
+    """Single-token GQA WITHOUT repeating KV heads.
+
+    The repeat-to-H path (fine for training) breaks decode at scale: the
+    head broadcast of a length-sharded cache has no valid GSPMD
+    transition, so SPMD falls back to full rematerialization — an
+    all-gather of the whole KV cache per layer per token (§Perf,
+    llama-90b decode_32k). Grouped einsums keep the contraction local to
+    each length shard; softmax over the sharded axis becomes the small
+    LSE all-reduce pair (flash-decoding).
+    """
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd)
+    logits = jnp.einsum(
+        "bqkgd,bskd->bkgqs", qg.astype(jnp.float32), k.astype(jnp.float32)
+    ) * (hd ** -0.5)                                     # [B, KV, G, 1, S]
+    if mask is not None:
+        logits = jnp.where(mask[:, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def cache_write(cache: jnp.ndarray, new: jnp.ndarray, slot, mode: str):
+    """Write `new` [B, 1, ...] into `cache` [B, L, ...] at position `slot`.
+
+    "dus": dynamic_update_slice — natural, but GSPMD must fully
+    rematerialize a length-sharded cache to apply it (one all-gather of
+    the cache per layer per token!).
+    "where": masked elementwise rewrite — local under any sharding; costs
+    one cache read+write of HBM traffic instead (§Perf, llama decode).
+    """
+    new = new.astype(cache.dtype)
+    if mode == "where":
+        L = cache.shape[1]
+        sel = jnp.arange(L) == slot
+        sel = sel.reshape((1, L) + (1,) * (cache.ndim - 2))
+        return jnp.where(sel, new, cache)
+    return jax.lax.dynamic_update_slice_in_dim(cache, new, slot, 1)
+
+
+# ---------------------------------------------------------------------------
+# Embeddings
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(key, vocab: int, d: int) -> Params:
+    return {"table": _dense_init(key, (vocab, d), scale=0.02)}
+
+
+def embed(p: Params, tokens: jnp.ndarray, dtype) -> jnp.ndarray:
+    return p["table"].astype(dtype)[tokens]
+
+
+def unembed(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.einsum("bsd,vd->bsv", x, p["table"].astype(x.dtype))
+
+
+def sinusoidal_positions(s: int, d: int) -> jnp.ndarray:
+    pos = jnp.arange(s, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10_000.0 ** (dim / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def sinusoidal_at(pos: jnp.ndarray, d: int) -> jnp.ndarray:
+    """Sinusoidal embedding for a single (traced) position. [d]."""
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)
+    ang = pos.astype(jnp.float32) / (10_000.0 ** (dim / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)

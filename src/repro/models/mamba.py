@@ -1,0 +1,194 @@
+"""Mamba-2 block (SSD — state-space duality, arXiv:2405.21060).
+
+Chunked SSD formulation: intra-chunk work is dense matmuls (MXU), only an
+[H, N, P] state crosses chunk boundaries. The pure-jnp chunked path below
+is the jit/dry-run implementation; kernels/ssd_scan is the Pallas TPU
+drop-in (same math, validated against the same sequential oracle).
+
+Decode carries (conv window, SSD state) — O(1) per token, which is what
+qualifies the SSM archs for the long_500k shape.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .layers import Params, _dense_init, init_rmsnorm, rmsnorm
+
+
+def _dims(cfg: ArchConfig, d_in: int):
+    d_inner = cfg.ssm_expand * d_in
+    H = max(d_inner // cfg.ssm_head_dim, 1)
+    P = cfg.ssm_head_dim
+    N = cfg.ssm_state
+    return d_inner, H, P, N
+
+
+def init_mamba(key, cfg: ArchConfig, d_in: Optional[int] = None) -> Params:
+    d_in = d_in or cfg.d_model
+    d_inner, H, P, N = _dims(cfg, d_in)
+    conv_ch = d_inner + 2 * N
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": _dense_init(ks[0], (d_in, 2 * d_inner + 2 * N + H)),
+        "conv_w": _dense_init(ks[1], (cfg.conv_width, conv_ch), scale=cfg.conv_width ** -0.5),
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(jnp.float32)),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "d_skip": jnp.ones((H,), jnp.float32),
+        "norm": init_rmsnorm(d_inner),
+        "out_proj": _dense_init(ks[2], (d_inner, d_in)),
+    }
+
+
+def _split_proj(p, x, cfg, d_in):
+    d_inner, H, P, N = _dims(cfg, d_in)
+    zxbcdt = x @ p["in_proj"].astype(x.dtype)
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner : 2 * d_inner + 2 * N]
+    dt = zxbcdt[..., 2 * d_inner + 2 * N :]
+    return z, xbc, dt
+
+
+def _causal_conv(p, xbc):
+    """Depthwise causal conv, width W. xbc [B, S, C]."""
+    W = p["conv_w"].shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + xbc.shape[1], :] * p["conv_w"][i].astype(xbc.dtype)
+        for i in range(W)
+    )
+    return jax.nn.silu(out + p["conv_b"].astype(xbc.dtype))
+
+
+def _ssd_chunked(x, loga, b, c, h0, chunk: int):
+    """Chunked SSD: x [B,S,H,P], loga [B,S,H], b/c [B,S,N], h0 [B,H,N,P].
+
+    Returns (y [B,S,H,P], h_final). Pure jnp; mirrors kernels/ssd_scan.
+    """
+    B, S, H, P = x.shape
+    N = b.shape[-1]
+    G = S // chunk
+    xg = x.reshape(B, G, chunk, H, P)
+    lg = loga.reshape(B, G, chunk, H)
+    bg = b.reshape(B, G, chunk, N)
+    cg = c.reshape(B, G, chunk, N)
+
+    lc = jnp.cumsum(lg, axis=2)                                   # [B,G,Q,H]
+    # Intra-chunk masked attention-like term. The exponent is clamped
+    # UNDER the mask: for j > i it is positive and exp() would overflow
+    # to inf, turning masked 0*inf into NaN gradients.
+    s = jnp.einsum("bgin,bgjn->bgij", cg.astype(jnp.float32), bg.astype(jnp.float32))
+    ii = jnp.arange(chunk)
+    mask = (ii[:, None] >= ii[None, :])[None, None, :, :, None]
+    delta = lc[:, :, :, None, :] - lc[:, :, None, :, :]           # [B,G,i,j,H]
+    decay = jnp.exp(jnp.where(mask, delta, 0.0))
+    sd = jnp.where(mask, s[..., None] * decay, 0.0)               # [B,G,i,j,H]
+    y = jnp.einsum("bgijh,bgjhp->bgihp", sd, xg.astype(jnp.float32))
+
+    # Chunk summaries.
+    w_end = jnp.exp(lc[:, :, -1:, :] - lc)                        # [B,G,Q,H]
+    summ = jnp.einsum(
+        "bgjn,bgjh,bgjhp->bghnp", bg.astype(jnp.float32), w_end, xg.astype(jnp.float32)
+    )                                                             # [B,G,H,N,P]
+    chunk_decay = jnp.exp(lc[:, :, -1, :])                        # [B,G,H]
+
+    # Inter-chunk recurrence over G (scan).
+    def step(h, inp):
+        summ_g, dec_g = inp                                       # [B,H,N,P], [B,H]
+        h_out = h                                                 # state entering chunk
+        h = dec_g[..., None, None] * h + summ_g
+        return h, h_out
+
+    h_fin, h_in = jax.lax.scan(
+        step, h0, (jnp.moveaxis(summ, 1, 0), jnp.moveaxis(chunk_decay, 1, 0))
+    )
+    h_in = jnp.moveaxis(h_in, 0, 1)                               # [B,G,H,N,P]
+
+    # Carried-state contribution.
+    y += jnp.einsum(
+        "bgin,bgih,bghnp->bgihp", cg.astype(jnp.float32), jnp.exp(lc), h_in
+    )
+    return y.reshape(B, S, H, P).astype(x.dtype), h_fin
+
+
+def mamba_train(
+    p: Params, x: jnp.ndarray, cfg: ArchConfig, *, d_in: Optional[int] = None,
+    chunk: int = 128,
+) -> jnp.ndarray:
+    d_in = d_in or cfg.d_model
+    d_inner, H, P, N = _dims(cfg, d_in)
+    B, S, _ = x.shape
+    z, xbc, dt = _split_proj(p, x, cfg, d_in)
+    xbc = _causal_conv(p, xbc)
+    xs = xbc[..., :d_inner].reshape(B, S, H, P)
+    b = xbc[..., d_inner : d_inner + N]
+    c = xbc[..., d_inner + N :]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # [B,S,H]
+    a = -jnp.exp(p["a_log"])                                      # [H] < 0
+    loga = dt * a                                                 # [B,S,H]
+    xdt = xs * dt[..., None].astype(xs.dtype)
+
+    h0 = jnp.zeros((B, H, N, P), jnp.float32)
+    y, _ = _ssd_chunked(xdt, loga, b, c, h0, min(chunk, S))
+    y = y + xs * p["d_skip"][None, None, :, None].astype(xs.dtype)
+    y = y.reshape(B, S, d_inner)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z))
+    return y @ p["out_proj"].astype(y.dtype)
+
+
+def mamba_prefill(p, x, cfg, *, d_in=None, chunk: int = 128):
+    """Train-style pass that also returns (conv_state, ssd_state)."""
+    d_in = d_in or cfg.d_model
+    d_inner, H, P, N = _dims(cfg, d_in)
+    B, S, _ = x.shape
+    z, xbc_raw, dt = _split_proj(p, x, cfg, d_in)
+    xbc = _causal_conv(p, xbc_raw)
+    xs = xbc[..., :d_inner].reshape(B, S, H, P)
+    b = xbc[..., d_inner : d_inner + N]
+    c = xbc[..., d_inner + N :]
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    loga = dtf * a
+    xdt = xs * dtf[..., None].astype(xs.dtype)
+    h0 = jnp.zeros((B, H, N, P), jnp.float32)
+    y, h_fin = _ssd_chunked(xdt, loga, b, c, h0, min(chunk, S))
+    y = y + xs * p["d_skip"][None, None, :, None].astype(xs.dtype)
+    y = rmsnorm(p["norm"], y.reshape(B, S, d_inner) * jax.nn.silu(z))
+    out = y @ p["out_proj"].astype(y.dtype)
+    W = cfg.conv_width
+    conv_state = xbc_raw[:, -(W - 1) :, :]                        # last raw inputs
+    return out, {"conv": conv_state, "h": h_fin}
+
+
+def mamba_decode(p, x, cache, cfg, *, d_in=None):
+    """One token. x [B, 1, D]; cache conv [B, W-1, C], h [B, H, N, P]."""
+    d_in = d_in or cfg.d_model
+    d_inner, H, P, N = _dims(cfg, d_in)
+    B = x.shape[0]
+    z, xbc_raw, dt = _split_proj(p, x, cfg, d_in)                 # [B,1,...]
+    W = cfg.conv_width
+    window = jnp.concatenate([cache["conv"], xbc_raw], axis=1)    # [B, W, C]
+    conv = sum(
+        window[:, i, :] * p["conv_w"][i].astype(x.dtype) for i in range(W)
+    )
+    xbc = jax.nn.silu(conv + p["conv_b"].astype(x.dtype))         # [B, C]
+    xs = xbc[..., :d_inner].reshape(B, H, P)
+    b = xbc[..., d_inner : d_inner + N]
+    c = xbc[..., d_inner + N :]
+    dtf = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # [B,H]
+    a = -jnp.exp(p["a_log"])
+    decay = jnp.exp(dtf * a)                                      # [B,H]
+    h = decay[..., None, None] * cache["h"] + jnp.einsum(
+        "bn,bhp->bhnp", b.astype(jnp.float32),
+        (xs * dtf[..., None].astype(xs.dtype)).astype(jnp.float32),
+    )
+    y = jnp.einsum("bn,bhnp->bhp", c.astype(jnp.float32), h).astype(x.dtype)
+    y = y + xs * p["d_skip"][None, :, None].astype(xs.dtype)
+    y = rmsnorm(p["norm"], y.reshape(B, 1, d_inner) * jax.nn.silu(z))
+    out = y @ p["out_proj"].astype(y.dtype)
+    return out, {"conv": window[:, 1:], "h": h}

@@ -1,0 +1,125 @@
+"""Multi-head Latent Attention (DeepSeek-V3, arXiv:2412.19437).
+
+Queries and KV are low-rank compressed; the decode cache stores only the
+compressed KV latent (kv_lora_rank) + the shared RoPE key (qk_rope_dim):
+576 floats/token/layer for the 671B config — the paper-relevant
+sub-quadratic-memory property that lets this arch run long_500k.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .layers import (
+    MaskSpec, Params, _auto_q_chunk, _dense_init, init_rmsnorm, rmsnorm,
+    rope_apply,
+)
+
+
+def init_mla(key, cfg: ArchConfig) -> Params:
+    D, H = cfg.d_model, cfg.n_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    rd, nd, vd = cfg.qk_rope_dim, cfg.qk_nope_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 8)
+    return {
+        "wdq": _dense_init(ks[0], (D, qr)),
+        "qnorm": init_rmsnorm(qr),
+        "wuq": _dense_init(ks[1], (qr, H, nd + rd)),
+        "wdkv": _dense_init(ks[2], (D, kvr)),
+        "kvnorm": init_rmsnorm(kvr),
+        "wkrope": _dense_init(ks[3], (D, rd)),
+        "wuk": _dense_init(ks[4], (kvr, H, nd)),
+        "wuv": _dense_init(ks[5], (kvr, H, vd)),
+        "wo": _dense_init(ks[6], (H, vd, D), scale=(H * vd) ** -0.5),
+    }
+
+
+def _q_proj(p, x, positions, cfg):
+    cq = rmsnorm(p["qnorm"], x @ p["wdq"].astype(x.dtype))
+    q = jnp.einsum("bsr,rhk->bshk", cq, p["wuq"].astype(x.dtype))
+    q_nope, q_rope = jnp.split(q, [cfg.qk_nope_dim], axis=-1)
+    q_rope = rope_apply(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _kv_latent(p, x, positions, cfg):
+    ckv = rmsnorm(p["kvnorm"], x @ p["wdkv"].astype(x.dtype))          # [B,S,kvr]
+    k_rope = rope_apply(
+        (x @ p["wkrope"].astype(x.dtype))[:, :, None, :], positions, cfg.rope_theta
+    )[:, :, 0]                                                          # [B,S,rd] shared
+    return ckv, k_rope
+
+
+def _attend(p, q_nope, q_rope, ckv, k_rope, cfg, mask=None, mask_spec=None):
+    """Score via decompressed keys; fp32 softmax; q-chunked at long Sq."""
+    k_nope = jnp.einsum("bsr,rhk->bshk", ckv, p["wuk"].astype(ckv.dtype))
+    v = jnp.einsum("bsr,rhk->bshk", ckv, p["wuv"].astype(ckv.dtype))
+    scale = (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+    B, Sq, H, _ = q_nope.shape
+    Sk = ckv.shape[1]
+
+    def attend_block(qn, qr, q0):
+        logits = (
+            jnp.einsum("bqhk,bshk->bhqs", qn.astype(jnp.float32), k_nope.astype(jnp.float32))
+            + jnp.einsum("bqhk,bsk->bhqs", qr.astype(jnp.float32), k_rope.astype(jnp.float32))
+        ) * scale
+        if mask_spec is not None:
+            m = mask_spec.block(q0, qn.shape[1], Sk)
+            logits = jnp.where(m[:, None], logits, -1e30)
+        elif mask is not None:
+            logits = jnp.where(mask[:, None], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1)
+        return jnp.einsum("bhqs,bshk->bqhk", probs, v.astype(jnp.float32)).astype(
+            q_nope.dtype
+        )
+
+    qc = _auto_q_chunk(Sq)
+    if qc and Sq % qc == 0 and mask is None:
+        nq = Sq // qc
+        qns = jnp.moveaxis(q_nope.reshape(B, nq, qc, H, -1), 1, 0)
+        qrs = jnp.moveaxis(q_rope.reshape(B, nq, qc, H, -1), 1, 0)
+        o = jax.lax.map(
+            lambda t: attend_block(t[0], t[1], t[2] * qc),
+            (qns, qrs, jnp.arange(nq)),
+        )
+        o = jnp.moveaxis(o, 0, 1).reshape(B, Sq, H, -1)
+    else:
+        o = attend_block(q_nope, q_rope, 0)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(o.dtype))
+
+
+def mla_train(p: Params, x, positions, cfg: ArchConfig) -> jnp.ndarray:
+    q_nope, q_rope = _q_proj(p, x, positions, cfg)
+    ckv, k_rope = _kv_latent(p, x, positions, cfg)
+    return _attend(p, q_nope, q_rope, ckv, k_rope, cfg,
+                   mask_spec=MaskSpec(causal=True))
+
+
+def mla_prefill(p, x, positions, cfg, *, s_max=None):
+    q_nope, q_rope = _q_proj(p, x, positions, cfg)
+    ckv, k_rope = _kv_latent(p, x, positions, cfg)
+    out = _attend(p, q_nope, q_rope, ckv, k_rope, cfg,
+                  mask_spec=MaskSpec(causal=True))
+    s_max = s_max or x.shape[1]
+    pad = s_max - x.shape[1]
+    if pad:
+        ckv = jnp.pad(ckv, ((0, 0), (0, pad), (0, 0)))
+        k_rope = jnp.pad(k_rope, ((0, 0), (0, pad), (0, 0)))
+    return out, {"ckv": ckv, "krope": k_rope}
+
+
+def mla_decode(p, x, pos, cache, cfg):
+    """x [B, 1, D]; cache ckv [B, S_max, kvr], krope [B, S_max, rd]."""
+    from .layers import cache_write
+
+    q_nope, q_rope = _q_proj(p, x, pos[None, None], cfg)
+    ckv_new, krope_new = _kv_latent(p, x, pos[None, None], cfg)
+    ckv = cache_write(cache["ckv"], ckv_new, pos, cfg.decode_cache_update)
+    krope = cache_write(cache["krope"], krope_new, pos, cfg.decode_cache_update)
+    s_max = ckv.shape[1]
+    mask = (jnp.arange(s_max)[None, None, :] <= pos)
+    out = _attend(p, q_nope, q_rope, ckv, krope, cfg, mask)
+    return out, {"ckv": ckv, "krope": krope}

@@ -1,0 +1,329 @@
+"""Model assembly: stage factoring, scan-over-layers, loss, prefill/decode.
+
+Every architecture is a sequence of *stages*; a stage is a repeating
+cycle of layer kinds (e.g. gemma3: 10 groups of [5x local, global]).
+Per-stage params are stacked on a leading group axis and driven by
+``lax.scan`` — HLO size stays flat in depth, which keeps the 512-device
+dry-run compiles tractable, and FSDP param gathering happens one group
+at a time (bounded live memory).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, _layer_kinds
+from .blocks import Ctx, block_apply, block_init
+from .layers import (
+    Params, embed, init_embedding, init_rmsnorm, rmsnorm,
+    sinusoidal_positions, unembed,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Stage:
+    cycle: Tuple[str, ...]
+    n_groups: int
+
+
+def _factor_stages(kinds: List[str], max_period: int = 12) -> List[Stage]:
+    """Factor a layer-kind list into repeating-cycle stages.
+
+    Only cycles that repeat (g >= 2) are admitted — a long non-repeating
+    cycle would unroll in the scan body and bloat the HLO.
+    """
+    stages: List[Stage] = []
+    i = 0
+    n = len(kinds)
+    while i < n:
+        best = (1, 1)  # (period, groups) — pd=1, g=1 always valid
+        for pd in range(1, min(max_period, (n - i) // 2) + 1):
+            cyc = kinds[i : i + pd]
+            g = 1
+            while i + (g + 1) * pd <= n and kinds[i + g * pd : i + (g + 1) * pd] == cyc:
+                g += 1
+            if g >= 2 and g * pd > best[0] * best[1]:
+                best = (pd, g)
+        pd, g = best
+        stages.append(Stage(tuple(kinds[i : i + pd]), g))
+        i += pd * g
+    return stages
+
+
+def build_stages(cfg: ArchConfig) -> List[Stage]:
+    kinds = [k for k in _layer_kinds(cfg) if k not in ("enc",)]
+    return _factor_stages(kinds)
+
+
+def build_enc_stages(cfg: ArchConfig) -> List[Stage]:
+    return _factor_stages(["enc"] * cfg.encoder_layers) if cfg.encoder_layers else []
+
+
+class Model:
+    """Functional model wrapper for one architecture."""
+
+    def __init__(self, cfg: ArchConfig, mesh=None):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.stages = build_stages(cfg)
+        self.enc_stages = build_enc_stages(cfg)
+        self.compute_dtype = jnp.dtype(cfg.compute_dtype)
+
+    def _constrain(self, x):
+        """Pin activations to [batch->DP, seq, d_model replicated].
+
+        Without this GSPMD may propagate the embedding table's layout
+        into the residual stream (d_model sharded, batch REPLICATED) —
+        silently multiplying compute by the DP degree.
+        """
+        if self.mesh is None:
+            return x
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        dp = tuple(a for a in self.mesh.axis_names if a != "model")
+        dp_total = 1
+        for a in dp:
+            dp_total *= self.mesh.shape[a]
+        if x.ndim < 2 or x.shape[0] % dp_total != 0:
+            return x
+        spec = P(dp, *([None] * (x.ndim - 1)))
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, spec))
+
+    # ------------------------------------------------------------------ init
+
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        ks = jax.random.split(key, 8)
+        params: Params = {
+            "embed": init_embedding(ks[0], cfg.vocab_size, cfg.d_model),
+            "final_norm": init_rmsnorm(cfg.d_model),
+        }
+        if not cfg.tie_embeddings:
+            params["unembed"] = init_embedding(ks[1], cfg.vocab_size, cfg.d_model)
+        if cfg.meta_tokens:
+            params["meta"] = (
+                jax.random.normal(ks[2], (cfg.meta_tokens, cfg.d_model)) * 0.02
+            )
+        params["stages"] = self._init_stages(ks[3], self.stages)
+        if self.enc_stages:
+            params["enc_stages"] = self._init_stages(ks[4], self.enc_stages)
+            params["enc_norm"] = init_rmsnorm(cfg.d_model)
+        if cfg.param_dtype != "float32":
+            pdt = jnp.dtype(cfg.param_dtype)
+            params = jax.tree_util.tree_map(lambda a: a.astype(pdt), params)
+        return params
+
+    def _init_stages(self, key, stages) -> List[Params]:
+        out = []
+        for si, st in enumerate(stages):
+            skey = jax.random.fold_in(key, si)
+
+            def init_group(gkey, _cycle=st.cycle):
+                return {
+                    f"l{j}": block_init(kind, jax.random.fold_in(gkey, j), self.cfg)
+                    for j, kind in enumerate(_cycle)
+                }
+
+            out.append(jax.vmap(init_group)(jax.random.split(skey, st.n_groups)))
+        return out
+
+    # ------------------------------------------------------------- internals
+
+    def _remat(self, fn):
+        if self.cfg.remat == "none":
+            return fn
+        if self.cfg.remat == "dots":
+            policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+            return jax.checkpoint(fn, policy=policy)
+        return jax.checkpoint(fn)
+
+    def _run_stages(self, stage_params, stages, x, ctx: Ctx, caches=None,
+                    remat=False):
+        """Scan each stage. Returns (x, aux, new_caches)."""
+        new_caches = []
+        aux = jnp.zeros((), jnp.float32)
+
+        for si, st in enumerate(stages):
+            cycle = st.cycle
+            gcaches = caches[si] if caches is not None else None
+
+            def body(carry, xs, _cycle=cycle, _has_cache=(gcaches is not None)):
+                x, aux = carry
+                gp, gcache = xs if _has_cache else (xs, None)
+                x = self._constrain(x)
+                out_cache = {}
+                for j, kind in enumerate(_cycle):
+                    c_in = None if gcache is None else gcache[f"l{j}"]
+                    x, c_out, a = block_apply(kind, gp[f"l{j}"], x, ctx, c_in)
+                    aux = aux + a
+                    out_cache[f"l{j}"] = c_out
+                if any(v is not None for v in out_cache.values()):
+                    return (x, aux), out_cache
+                return (x, aux), None
+
+            body_fn = self._remat(body) if remat else body
+            xs = (stage_params[si], gcaches) if gcaches is not None else stage_params[si]
+            (x, aux), ys = jax.lax.scan(body_fn, (x, aux), xs)
+            new_caches.append(ys)
+        return x, aux, new_caches
+
+    def _encode(self, params, frames):
+        """Whisper encoder on stubbed frame embeddings [B, T, D]."""
+        x = frames.astype(self.compute_dtype)
+        x = x + sinusoidal_positions(x.shape[1], self.cfg.d_model).astype(x.dtype)
+        ctx = Ctx(cfg=self.cfg, mode="train", positions=jnp.arange(x.shape[1]))
+        x, _, _ = self._run_stages(params["enc_stages"], self.enc_stages, x, ctx)
+        return rmsnorm(params["enc_norm"], x)
+
+    def _embed_in(self, params, tokens, pos=None):
+        x = self._constrain(embed(params["embed"], tokens, self.compute_dtype))
+        if self.cfg.rope_theta <= 0:  # whisper: sinusoidal absolute positions
+            from .layers import sinusoidal_at
+
+            if pos is None:
+                x = x + sinusoidal_positions(
+                    tokens.shape[1], self.cfg.d_model
+                ).astype(x.dtype)
+            else:
+                x = x + sinusoidal_at(pos, self.cfg.d_model).astype(x.dtype)
+        return x
+
+    def _logits(self, params, x):
+        x = rmsnorm(params["final_norm"], x)
+        table = params["embed"] if self.cfg.tie_embeddings else params["unembed"]
+        return unembed(table, x)
+
+    def _ctx(self, mode, batch=None, params=None, **kw) -> Ctx:
+        cfg = self.cfg
+        cross_src = None
+        if batch is not None and cfg.family == "vlm":
+            cross_src = batch["vision_embeds"].astype(self.compute_dtype)
+        if batch is not None and cfg.family == "encdec":
+            cross_src = self._encode(params, batch["frames"])
+        meta = params.get("meta") if (params and cfg.meta_tokens) else None
+        return Ctx(cfg=cfg, mode=mode, cross_src=cross_src, meta=meta,
+                   mesh=self.mesh, **kw)
+
+    # ------------------------------------------------------------------ train
+
+    def loss_fn(self, params, batch) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+        """Next-token CE (+ MoE aux loss). batch: tokens/targets [B, S]."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        S = tokens.shape[1]
+        ctx = self._ctx("train", batch, params, positions=jnp.arange(S))
+        x = self._embed_in(params, tokens)
+        x, aux, _ = self._run_stages(params["stages"], self.stages, x, ctx,
+                                     remat=True)
+        logits = self._logits(params, x)
+
+        targets = batch["targets"]
+        mask = (targets >= 0).astype(jnp.float32)
+        tgt = jnp.maximum(targets, 0)
+        lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+        tgt_logit = jnp.take_along_axis(
+            logits.astype(jnp.float32), tgt[..., None], axis=-1
+        )[..., 0]
+        ce = (lse - tgt_logit) * mask
+        ntok = jnp.maximum(mask.sum(), 1.0)
+        loss = ce.sum() / ntok
+        zloss = 1e-4 * ((lse * mask) ** 2).sum() / ntok
+        total = loss + zloss + 0.01 * aux
+        return total, {"ce": loss, "zloss": zloss, "aux": aux}
+
+    # ------------------------------------------------------------- prefill
+
+    def prefill(self, params, tokens, extras: Optional[Dict] = None, *,
+                s_max: int) -> Tuple[jnp.ndarray, Any]:
+        """Run the prompt; returns (last-token logits [B, V], cache)."""
+        extras = extras or {}
+        S = tokens.shape[1]
+        ctx = self._ctx("prefill", {**extras}, params,
+                        positions=jnp.arange(S), s_max=s_max)
+        x = self._embed_in(params, tokens)
+        x, _, caches = self._run_stages(params["stages"], self.stages, x, ctx)
+        logits = self._logits(params, x[:, -1:, :])[:, 0]
+        return logits, caches
+
+    # --------------------------------------------------------------- decode
+
+    def decode_step(self, params, caches, token, pos) -> Tuple[jnp.ndarray, Any]:
+        """One token for the whole batch. token [B], pos scalar int32."""
+        ctx = self._ctx("decode", None, params, pos=pos)
+        x = self._embed_in(params, token[:, None], pos=pos)
+        x, _, new_caches = self._run_stages(
+            params["stages"], self.stages, x, ctx, caches=caches
+        )
+        logits = self._logits(params, x)[:, 0]
+        return logits, new_caches
+
+    # ----------------------------------------------------------- cache spec
+
+    def cache_struct(self, batch_size: int, s_max: int):
+        """abstract cache pytree (zeros) — used by the decode dry-run."""
+        cfg = self.cfg
+        dt = self.compute_dtype
+        KV, hd = cfg.n_kv_heads, cfg.hd
+
+        def attn_cache(g, length):
+            return {
+                "k": jnp.zeros((g, batch_size, length, KV, hd), dt),
+                "v": jnp.zeros((g, batch_size, length, KV, hd), dt),
+            }
+
+        def layer_cache(kind, g):
+            if kind == "local":       # rolling window buffer
+                return attn_cache(g, min(cfg.local_window, s_max) or s_max)
+            if kind in ("dense", "global"):
+                return attn_cache(g, s_max)
+            if kind == "moe":
+                if cfg.use_mla:
+                    return {
+                        "ckv": jnp.zeros((g, batch_size, s_max, cfg.kv_lora_rank), dt),
+                        "krope": jnp.zeros((g, batch_size, s_max, cfg.qk_rope_dim), dt),
+                    }
+                return attn_cache(g, s_max)
+            if kind == "ssm":
+                from .mamba import _dims
+
+                d_inner, H, P, N = _dims(cfg, cfg.d_model)
+                return {
+                    "conv": jnp.zeros(
+                        (g, batch_size, cfg.conv_width - 1, d_inner + 2 * N), dt
+                    ),
+                    "h": jnp.zeros((g, batch_size, H, N, P), jnp.float32),
+                }
+            if kind == "hybrid":
+                wl = (
+                    cfg.meta_tokens + min(cfg.local_window, s_max)
+                    if cfg.local_window
+                    else s_max + cfg.meta_tokens
+                )
+                return {
+                    "attn": attn_cache(g, wl),
+                    "ssm": layer_cache("ssm", g),
+                }
+            if kind == "cross":
+                return attn_cache(g, cfg.vision_tokens)
+            if kind == "dec":
+                return {
+                    "self": attn_cache(g, s_max),
+                    "cross": attn_cache(g, cfg.encoder_frames),
+                }
+            raise ValueError(kind)
+
+        caches = []
+        for st in self.stages:
+            caches.append(
+                {f"l{j}": layer_cache(kind, st.n_groups)
+                 for j, kind in enumerate(st.cycle)}
+            )
+        return caches
+
+
+def build_model(cfg: ArchConfig, mesh=None) -> Model:
+    return Model(cfg, mesh)

@@ -1,0 +1,181 @@
+"""Fine-grained Mixture-of-Experts (DeepSeek family) with expert parallelism.
+
+Two dispatch modes (the §Perf hillclimb compares them):
+
+* ``gspmd``     — dense one-hot combine einsums; XLA's SPMD partitioner
+  chooses the collectives. Simple, and the *paper-faithful analogue of
+  horizontal partitioning*: token activations are gathered to wherever
+  the experts live.
+* ``shard_map`` — explicit capacity-bucketed all_to_all over the `model`
+  mesh axis (expert parallelism). Tokens move to the shard that owns
+  their expert, exactly the paper's "move the task to the data" vertical
+  rule (§4.1: feature subsets pinned, tasks dispatched to them).
+
+Both modes share the router and the capacity-drop policy so they are
+numerically interchangeable (validated in tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .layers import Params, _dense_init, init_mlp, mlp_apply
+
+
+def init_moe(key, cfg: ArchConfig) -> Params:
+    D, E, F = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 4)
+    glu = cfg.act in ("swiglu", "geglu")
+    p = {
+        "router": _dense_init(ks[0], (D, E)),
+        "experts": {
+            "w1": _dense_init(ks[1], (E, D, F)),
+            "w2": _dense_init(ks[2], (E, F, D)),
+        },
+    }
+    if glu:
+        p["experts"]["w3"] = _dense_init(ks[3], (E, D, F))
+    if cfg.n_shared_experts:
+        p["shared"] = init_mlp(
+            jax.random.fold_in(key, 99), D, F * cfg.n_shared_experts, cfg.act
+        )
+    return p
+
+
+def _expert_ffn(pe: Params, x: jnp.ndarray, act: str) -> jnp.ndarray:
+    """x [E, T, D] batched over local experts."""
+    h = jnp.einsum("etd,edf->etf", x, pe["w1"].astype(x.dtype))
+    if act == "swiglu":
+        h = jax.nn.silu(h) * jnp.einsum("etd,edf->etf", x, pe["w3"].astype(x.dtype))
+    elif act == "geglu":
+        h = jax.nn.gelu(h) * jnp.einsum("etd,edf->etf", x, pe["w3"].astype(x.dtype))
+    else:
+        h = jax.nn.gelu(h)
+    return jnp.einsum("etf,efd->etd", h, pe["w2"].astype(x.dtype))
+
+
+def _route(p, x2d, cfg: ArchConfig):
+    """Top-K routing with normalized softmax gates.
+
+    Returns (idx [T, K], gate [T, K], aux_loss scalar).
+    """
+    logits = (x2d @ p["router"].astype(x2d.dtype)).astype(jnp.float32)  # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, cfg.experts_per_token)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+    # Load-balance auxiliary loss (Switch-style).
+    T, E = probs.shape
+    me = probs.mean(0)
+    ce = jnp.zeros((E,), jnp.float32).at[idx.reshape(-1)].add(1.0) / (T * cfg.experts_per_token)
+    aux = E * jnp.sum(me * ce)
+    return idx, gate.astype(x2d.dtype), aux
+
+
+def _capacity(T: int, cfg: ArchConfig) -> int:
+    cap = int(T * cfg.experts_per_token * cfg.capacity_factor / cfg.n_experts)
+    return max(cap, 4)
+
+
+def _dispatch_indices(idx, cfg, T, cap):
+    """Position of each (token, k) assignment within its expert's bucket.
+
+    Returns (pos [T, K], keep [T, K]) — deterministic capacity-drop by
+    token order (GShard policy), computed with one stable sort.
+    """
+    K = cfg.experts_per_token
+    flat_e = idx.reshape(-1)                                   # [T*K]
+    order = jnp.argsort(flat_e, stable=True)                   # group by expert
+    ranks = jnp.arange(T * K, dtype=jnp.int32)
+    # position within group = running index - index of group start
+    sorted_e = flat_e[order]
+    seg_start = jnp.full((cfg.n_experts,), T * K, jnp.int32).at[sorted_e].min(ranks)
+    pos_sorted = ranks - seg_start[sorted_e]
+    pos = jnp.zeros((T * K,), jnp.int32).at[order].set(pos_sorted)
+    keep = pos < cap
+    return pos.reshape(T, K), keep.reshape(T, K)
+
+
+def moe_apply_gspmd(p: Params, x: jnp.ndarray, cfg: ArchConfig):
+    """Dense dispatch/combine einsums; sharding left to GSPMD."""
+    B, S, D = x.shape
+    x2d = x.reshape(-1, D)
+    T = x2d.shape[0]
+    idx, gate, aux = _route(p, x2d, cfg)
+    cap = _capacity(T, cfg)
+    pos, keep = _dispatch_indices(idx, cfg, T, cap)
+
+    # Scatter tokens into [E, cap, D] buckets.
+    w = jnp.where(keep, gate, 0.0)                                   # [T, K]
+    buckets = jnp.zeros((cfg.n_experts, cap, D), x.dtype)
+    tok_rep = jnp.broadcast_to(
+        x2d[:, None, :], (T, cfg.experts_per_token, D)
+    ).reshape(-1, D)
+    e_flat = idx.reshape(-1)
+    p_flat = jnp.where(keep.reshape(-1), pos.reshape(-1), cap)       # drops -> OOB
+    buckets = buckets.at[e_flat, p_flat].add(tok_rep, mode="drop")
+
+    out_buckets = _expert_ffn(p["experts"], buckets, cfg.act)        # [E, cap, D]
+
+    # Gather back + gate.
+    gathered = out_buckets.at[e_flat, p_flat].get(mode="fill", fill_value=0.0)
+    y = (gathered.reshape(T, cfg.experts_per_token, D) * w[..., None]).sum(1)
+
+    if "shared" in p:
+        y = y + mlp_apply(p["shared"], x2d, cfg.act)
+    return y.reshape(B, S, D), aux
+
+
+def moe_apply_shard_map(
+    p: Params, x: jnp.ndarray, cfg: ArchConfig, *, expert_axis: str = "model"
+):
+    """Explicit EP: capacity buckets + all_to_all over `expert_axis`.
+
+    Runs inside an outer shard_map (see model.py) where `x` is the local
+    token shard [B_loc, S, D] and the expert arrays are sharded on their
+    leading axis. Here we receive the *local* expert slab and local
+    tokens, and exchange bucket slabs with all_to_all.
+    """
+    B, S, D = x.shape
+    x2d = x.reshape(-1, D)
+    T = x2d.shape[0]
+    idx, gate, aux = _route(p, x2d, cfg)
+    cap = _capacity(T, cfg)
+    pos, keep = _dispatch_indices(idx, cfg, T, cap)
+
+    w = jnp.where(keep, gate, 0.0)
+    buckets = jnp.zeros((cfg.n_experts, cap, D), x.dtype)
+    tok_rep = jnp.broadcast_to(
+        x2d[:, None, :], (T, cfg.experts_per_token, D)
+    ).reshape(-1, D)
+    e_flat = idx.reshape(-1)
+    p_flat = jnp.where(keep.reshape(-1), pos.reshape(-1), cap)
+    buckets = buckets.at[e_flat, p_flat].add(tok_rep, mode="drop")   # [E, cap, D]
+
+    P = jax.lax.axis_size(expert_axis)
+    e_loc = cfg.n_experts // P
+    # [E, cap, D] -> [P, e_loc, cap, D] -> exchange -> [P(src), e_loc, cap, D]
+    send = buckets.reshape(P, e_loc, cap, D)
+    recv = jax.lax.all_to_all(send, expert_axis, split_axis=0, concat_axis=0, tiled=False)
+    # Local experts see P source-shards' buckets: [e_loc, P*cap, D].
+    recv = jnp.transpose(recv, (1, 0, 2, 3)).reshape(e_loc, P * cap, D)
+
+    # p["experts"] leaves arrive as the *local* expert slab [e_loc, ...]
+    # (the enclosing shard_map shards the leading expert axis over
+    # `expert_axis`).
+    out_loc = _expert_ffn(p["experts"], recv, cfg.act)
+
+    # Reverse exchange.
+    back = jnp.transpose(out_loc.reshape(e_loc, P, cap, D), (1, 0, 2, 3))
+    out_buckets = jax.lax.all_to_all(
+        back, expert_axis, split_axis=0, concat_axis=0, tiled=False
+    ).reshape(cfg.n_experts, cap, D)
+
+    gathered = out_buckets.at[e_flat, p_flat].get(mode="fill", fill_value=0.0)
+    y = (gathered.reshape(T, cfg.experts_per_token, D) * w[..., None]).sum(1)
+    if "shared" in p:
+        y = y + mlp_apply(p["shared"], x2d, cfg.act)
+    return y.reshape(B, S, D), aux

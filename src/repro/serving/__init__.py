@@ -1,0 +1,1 @@
+from .serve_step import make_serve_fns  # noqa: F401

@@ -1,0 +1,58 @@
+"""Serving step factories: batched prefill + decode with cache shardings.
+
+Cache sharding policy (see training/sharding.cache_specs):
+  * decode_32k  — batch >= DP size: batch-sharded cache, heads over TP.
+  * long_500k   — batch == 1: cache LENGTH sharded over `data` (the
+    paper's vertical partitioning applied to the KV positions; softmax
+    over the sharded axis becomes a max/sum all-reduce pair that GSPMD
+    inserts — flash-decoding's LSE combine, derived not hand-written).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.model import Model
+from ..training.sharding import cache_specs, param_shardings
+
+
+def make_serve_fns(model: Model, mesh: Optional[Mesh] = None, *,
+                   s_max: int, batch_sharded: bool = True,
+                   dp_axes=("data",)):
+    """Returns (prefill_fn, decode_fn[, shardings dict if mesh])."""
+
+    def prefill(params, tokens, extras):
+        return model.prefill(params, tokens, extras, s_max=s_max)
+
+    def decode(params, cache, token, pos):
+        return model.decode_step(params, cache, token, pos)
+
+    if mesh is None:
+        return jax.jit(prefill, static_argnames=()), jax.jit(decode), None
+
+    cache_shape = jax.eval_shape(
+        lambda: model.cache_struct(1, 8)
+    )  # structure only; real specs computed on the fly by dryrun
+    shardings = {
+        "dp_spec": P(tuple(dp_axes)),
+    }
+    return jax.jit(prefill), jax.jit(decode), shardings
+
+
+def greedy_generate(model: Model, params, tokens, extras=None, *,
+                    steps: int, s_max: int):
+    """Simple batched greedy decoding loop (examples/serve_lm.py)."""
+    logits, cache = jax.jit(
+        lambda p, t, e: model.prefill(p, t, e, s_max=s_max)
+    )(params, tokens, extras or {})
+    decode = jax.jit(model.decode_step)
+    out = [jnp.argmax(logits, -1).astype(jnp.int32)]
+    pos = tokens.shape[1]
+    for i in range(steps - 1):
+        logits, cache = decode(params, cache, out[-1], jnp.int32(pos + i))
+        out.append(jnp.argmax(logits, -1).astype(jnp.int32))
+    return jnp.stack(out, axis=1)

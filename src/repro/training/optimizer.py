@@ -1,0 +1,126 @@
+"""AdamW with dtype-configurable moments (no optax in this environment).
+
+Moments may be stored in bf16 (``moment_dtype``) for the XXL configs —
+deepseek-v3-671b does not fit fp32 moments in 16 GB/chip on 512 chips
+(see DESIGN.md §4). All arithmetic happens in fp32; storage dtype only
+affects at-rest bytes. Optimizer state inherits parameter shardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: str = "float32"
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    # Factor the second moment over the last two dims (Adafactor-style) —
+    # the XXL configs (deepseek-v3-671b) cannot hold full AdamW state:
+    # 3 x 1.34 TB on a 256-chip pod is the pod's entire HBM.
+    factored: bool = False
+
+
+def schedule(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Linear warmup + cosine decay to min_lr_ratio."""
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.decay_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def _is_factorable(p) -> bool:
+    return p.ndim >= 2 and p.shape[-1] > 1 and p.shape[-2] > 1
+
+
+def adamw_init(params, cfg: AdamWConfig) -> Dict[str, Any]:
+    dt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros_like(p, dtype=dt)
+
+    def vinit(p):
+        if cfg.factored and _is_factorable(p):
+            return {
+                "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return jnp.zeros_like(p, dtype=dt)
+
+    return {
+        "m": jax.tree_util.tree_map(zeros, params),
+        "v": jax.tree_util.tree_map(vinit, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+
+
+def adamw_update(
+    params, grads, state, cfg: AdamWConfig
+) -> Tuple[Any, Dict[str, Any], Dict[str, jnp.ndarray]]:
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    lr = schedule(cfg, step)
+    bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        mhat = m32 / bc1
+        if isinstance(v, dict):  # factored second moment
+            g2 = g * g + 1e-30
+            vr = cfg.b2 * v["vr"] + (1 - cfg.b2) * g2.mean(axis=-1)
+            vc = cfg.b2 * v["vc"] + (1 - cfg.b2) * g2.mean(axis=-2)
+            vhat = (
+                vr[..., None] * vc[..., None, :]
+                / jnp.maximum(vr.mean(axis=-1)[..., None, None], 1e-30)
+            ) / bc2
+            new_v = {"vr": vr, "vc": vc}
+        else:
+            v32 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g * g
+            vhat = v32 / bc2
+            new_v = v32.astype(mdt)
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * delta
+        return newp.astype(p.dtype), m32.astype(mdt), new_v
+
+    out = _tree_map_with_v(upd, params, grads, state["m"], state["v"])
+    is_out_leaf = lambda t: isinstance(t, tuple)
+    new_params = jax.tree_util.tree_map(lambda t: t[0], out, is_leaf=is_out_leaf)
+    new_m = jax.tree_util.tree_map(lambda t: t[1], out, is_leaf=is_out_leaf)
+    new_v = jax.tree_util.tree_map(lambda t: t[2], out, is_leaf=is_out_leaf)
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, {"m": new_m, "v": new_v, "step": step}, metrics
+
+
+def _tree_map_with_v(fn, params, grads, m, v):
+    """tree_map where v leaves may be {'vr','vc'} dicts."""
+    pl, treedef = jax.tree_util.tree_flatten(params)
+    gl = treedef.flatten_up_to(grads)
+    ml = treedef.flatten_up_to(m)
+    vl = treedef.flatten_up_to(v)
+    out = [fn(p, g, mm, vv) for p, g, mm, vv in zip(pl, gl, ml, vl)]
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,212 @@
+"""Parameter sharding rules: FSDP(`data`) x TP(`model`) x pure-DP(`pod`).
+
+Every rule is validated against the actual dim sizes: a mesh axis is only
+assigned to a tensor dim it divides; otherwise that dim stays replicated
+(the GQA case — kv_heads < tp — degrades gracefully). Params under
+"stages"/"enc_stages" carry a leading layer-group axis that is never
+sharded (it is the `lax.scan` axis; FSDP gathers one group per step).
+
+This layout is the LM-training translation of the paper's vertical
+partitioning: shard the axis along which compute is independent
+(heads/ff/experts -> `model`), keep the reduction axis local, and let the
+`pod` axis carry pure data parallelism so scaling out pods never
+re-shards the model (elasticity).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _axis_sizes(mesh: Mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _fits(size: int, dim: int) -> bool:
+    return dim % size == 0 and dim >= size
+
+
+def param_spec(path: str, shape, mesh: Mesh, *, fsdp=None,
+               tp: str = "model", uneven_heads: bool = False,
+               fsdp_tables_only: bool = False) -> P:
+    """PartitionSpec for one param, by path suffix + shape validation.
+
+    ``fsdp`` defaults to ALL non-`model` axes (pods included): at 512+
+    chips the optimizer state must shard across pods too (ZeRO-3 over
+    DCN with prefetch; see DESIGN.md §4).
+
+    ``uneven_heads``: shard head axes over `model` even when the head
+    count does not divide it (GSPMD pads) — trades <=2x head-padding
+    waste for zero sequence-reshard collectives (§Perf).
+    """
+    sz = _axis_sizes(mesh)
+    if fsdp is None:
+        fsdp = tuple(a for a in mesh.axis_names if a != tp)
+    if isinstance(fsdp, str):
+        fsdp = (fsdp,)
+    fsdp_size = int(np.prod([sz[a] for a in fsdp]))
+    stacked = ("stages" in path)           # leading scan axis
+    dims = list(shape[1:] if stacked else shape)
+    name = path.split("/")[-1]
+    head_param = name in ("wq", "wk", "wv", "wo")
+    if fsdp_tables_only and name != "table":
+        fsdp = ()                          # weight-stationary layers (serving)
+        fsdp_size = 1
+
+    def maybe(axis, dim_idx):
+        if not (0 <= dim_idx < len(dims)):
+            return None
+        if axis == fsdp:
+            if not fsdp:                 # FSDP disabled: replicate over DP
+                return None
+            return fsdp if _fits(fsdp_size, dims[dim_idx]) else None
+        if axis in sz and _fits(sz[axis], dims[dim_idx]):
+            return axis
+        if axis in sz and uneven_heads and head_param and dims[dim_idx] >= 2:
+            return axis                  # padded sharding
+        return None
+
+    spec = [None] * len(dims)
+
+    if name == "table":                    # embed/unembed [V, D]
+        spec[0] = maybe(tp, 0)
+        spec[1] = maybe(fsdp, 1)
+    elif name in ("wq",):                  # [D, H, hd]
+        spec[0] = maybe(fsdp, 0)
+        spec[1] = maybe(tp, 1)
+    elif name in ("wk", "wv"):             # [D, KV, hd]
+        spec[0] = maybe(fsdp, 0)
+        spec[1] = maybe(tp, 1)             # None when KV % tp != 0
+    elif name == "wo":                     # [H, hd, D]
+        spec[0] = maybe(tp, 0)
+        spec[2] = maybe(fsdp, 2)
+    elif name in ("w1", "w3") and len(dims) == 2:   # [D, F]
+        spec[0] = maybe(fsdp, 0)
+        spec[1] = maybe(tp, 1)
+    elif name == "w2" and len(dims) == 2:  # [F, D]
+        spec[0] = maybe(tp, 0)
+        spec[1] = maybe(fsdp, 1)
+    elif name in ("w1", "w3") and len(dims) == 3:   # experts [E, D, F]
+        spec[0] = maybe(tp, 0)             # EP: experts over `model`
+        spec[1] = maybe(fsdp, 1)
+    elif name == "w2" and len(dims) == 3:  # experts [E, F, D]
+        spec[0] = maybe(tp, 0)
+        spec[2] = maybe(fsdp, 2)
+    elif name == "router":                 # [D, E]
+        spec[0] = maybe(fsdp, 0)
+    elif name in ("wdq", "wdkv", "wkrope"):          # MLA down [D, r]
+        spec[0] = maybe(fsdp, 0)
+    elif name in ("wuq", "wuk", "wuv"):    # MLA up [r, H, k]
+        spec[1] = maybe(tp, 1)
+    elif name == "in_proj":                # mamba [D, X]
+        spec[0] = maybe(fsdp, 0)
+        spec[1] = maybe(tp, 1)
+    elif name == "out_proj":               # mamba [d_inner, D]
+        spec[0] = maybe(tp, 0)
+        spec[1] = maybe(fsdp, 1)
+    elif name == "conv_w":                 # [W, C]
+        spec[1] = maybe(tp, 1)
+    elif name == "conv_b":                 # [C]
+        spec[0] = maybe(tp, 0)
+    # everything else (norms, biases, gates, meta, a_log, ...) replicated
+
+    if stacked:
+        spec = [None] + spec
+    return P(*spec)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_specs(params, mesh: Mesh, **kw):
+    """Pytree of PartitionSpecs matching `params`."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = [param_spec(_path_str(p), np.shape(v), mesh, **kw) for p, v in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def param_shardings(params, mesh: Mesh, **kw):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), param_specs(params, mesh, **kw)
+    )
+
+
+def opt_state_specs(opt_shape, params_specs):
+    """Moment shardings: m inherits param specs; v inherits them too
+    except factored {vr, vc} leaves, which are small and replicated."""
+    ptreedef = jax.tree_util.tree_structure(params_specs)
+    pspecs_flat = jax.tree_util.tree_leaves(params_specs)
+    v_flat = ptreedef.flatten_up_to(opt_shape["v"])
+    v_specs = [
+        {"vr": P(), "vc": P()} if isinstance(v, dict) else s
+        for v, s in zip(v_flat, pspecs_flat)
+    ]
+    return {
+        "m": params_specs,
+        "v": jax.tree_util.tree_unflatten(ptreedef, v_specs),
+        "step": P(),
+    }
+
+
+def cache_specs(cache, mesh: Mesh, *, batch_sharded: bool,
+                dp_axes=("data",), tp: str = "model"):
+    """KV/SSM cache shardings — the paper's vertical-partition insight
+    applied to serving: shard the *independent* axis.
+
+    batch_sharded (decode_32k): batch over DP axes, cache LENGTH over
+    `model` (flash-decoding: GSPMD turns the softmax over the sharded
+    length into a small max/sum all-reduce pair).
+
+    batch=1 (long_500k): length shards over EVERY mesh axis; SSD states
+    shard heads over `model` and the state dim over `data`.
+    """
+    sz = _axis_sizes(mesh)
+    all_axes = tuple(mesh.axis_names)
+
+    def spec_for(path, leaf):
+        name = _path_str(path).split("/")[-1]
+        dims = list(np.shape(leaf))   # [G, B, L, KV, hd] / [G, B, L, r] / conv / h
+        spec = [None] * len(dims)
+        dp_total = int(np.prod([sz[a] for a in dp_axes]))
+
+        if name in ("k", "v", "ckv", "krope"):
+            if batch_sharded and _fits(dp_total, dims[1]):
+                spec[1] = dp_axes
+                if _fits(sz.get(tp, 1), dims[2]):
+                    spec[2] = tp
+            else:  # batch too small: shard length over the whole mesh
+                full = int(np.prod(list(sz.values())))
+                if _fits(full, dims[2]):
+                    spec[2] = all_axes
+                elif _fits(sz.get(tp, 1), dims[2]):
+                    spec[2] = tp
+        elif name == "h":             # [G, B, H, N, P]
+            if batch_sharded and _fits(dp_total, dims[1]):
+                spec[1] = dp_axes
+            elif _fits(sz.get("data", 1), dims[3]):
+                spec[3] = "data"      # SSD state dim over data when B==1
+            if _fits(sz.get(tp, 1), dims[2]):
+                spec[2] = tp          # SSD heads over tp
+        elif name == "conv":          # [G, B, W-1, C]
+            if batch_sharded and _fits(dp_total, dims[1]):
+                spec[1] = dp_axes
+            if _fits(sz.get(tp, 1), dims[3]):
+                spec[3] = tp
+        return P(*spec)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    return jax.tree_util.tree_unflatten(
+        treedef, [spec_for(p, v) for p, v in flat]
+    )

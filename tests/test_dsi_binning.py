@@ -1,0 +1,59 @@
+"""DSI table (paper §4.1.2) + quantile binning unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.binning import apply_bins, bin_dataset, fit_bins
+from repro.core.dsi import bootstrap_counts, dsi_counts, make_dsi, oob_mask
+
+
+def test_dsi_counts_match_table():
+    key = jax.random.PRNGKey(0)
+    dsi = make_dsi(key, 4, 100)
+    counts = dsi_counts(dsi, 100)
+    assert counts.shape == (4, 100)
+    # each row redistributes exactly N draws
+    np.testing.assert_allclose(np.asarray(counts).sum(1), 100.0)
+    # manual bincount agreement
+    row = np.asarray(dsi[0])
+    np.testing.assert_allclose(np.asarray(counts[0]), np.bincount(row, minlength=100))
+
+
+def test_oob_fraction_near_1_over_e():
+    counts = bootstrap_counts(jax.random.PRNGKey(1), 16, 4000)
+    frac = float(oob_mask(counts).mean())
+    assert 0.33 < frac < 0.40     # 1/e = 0.3679
+
+
+def test_bootstrap_counts_fused_equals_two_step():
+    key = jax.random.PRNGKey(2)
+    c1 = bootstrap_counts(key, 3, 50)
+    c2 = dsi_counts(make_dsi(key, 3, 50), 50)
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+
+
+def test_binning_monotone_and_bounded():
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((500, 6)).astype(np.float32)
+    xb, edges = bin_dataset(x, 16)
+    assert xb.dtype == np.uint8
+    assert xb.max() <= 15
+    # order preservation per feature
+    f = 2
+    order = np.argsort(x[:, f])
+    assert (np.diff(xb[order, f].astype(int)) >= 0).all()
+
+
+def test_binning_handles_constant_feature():
+    x = np.ones((100, 2), np.float32)
+    x[:, 1] = np.arange(100)
+    xb, edges = bin_dataset(x, 8)
+    assert (xb[:, 0] == xb[0, 0]).all()
+
+
+def test_apply_bins_quantile_balance():
+    rng = np.random.default_rng(3)
+    x = rng.standard_normal((4000, 1)).astype(np.float32)
+    xb, _ = bin_dataset(x, 8)
+    counts = np.bincount(xb[:, 0], minlength=8)
+    assert counts.min() > 4000 / 8 * 0.7

@@ -1,0 +1,120 @@
+"""PRF end-to-end behaviour: growth, prediction, voting, dimred, baselines."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ForestConfig, train_prf
+from repro.core.baselines import data_volume_bytes, train_mlrf_like, train_rf
+from repro.data.tabular import make_classification, make_regression, train_test_split
+
+
+def test_prf_beats_majority_baseline(class_data):
+    xtr, ytr, xte, yte = class_data
+    cfg = ForestConfig(n_trees=16, max_depth=6, n_bins=32, n_classes=4)
+    model = train_prf(xtr, ytr, cfg, seed=0)
+    acc = model.accuracy(xte, yte)
+    maj = np.bincount(yte).max() / len(yte)
+    assert acc > maj + 0.25, (acc, maj)
+    assert acc > 0.75
+
+
+def test_tree_chunking_is_exact(class_data):
+    xtr, ytr, xte, yte = class_data
+    cfg = ForestConfig(n_trees=8, max_depth=5, n_bins=16, n_classes=4)
+    m1 = train_prf(xtr, ytr, cfg, seed=3)
+    m2 = train_prf(xtr, ytr, dataclasses.replace(cfg, tree_chunk=2), seed=3)
+    np.testing.assert_array_equal(
+        np.asarray(m1.forest.feature), np.asarray(m2.forest.feature)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(m1.forest.threshold), np.asarray(m2.forest.threshold)
+    )
+
+
+def test_beam_frontier_bounds_nodes(class_data):
+    xtr, ytr, xte, yte = class_data
+    cfg = ForestConfig(
+        n_trees=4, max_depth=10, n_bins=16, n_classes=4, max_frontier=8
+    )
+    m = train_prf(xtr, ytr, cfg, seed=0)
+    assert m.forest.feature.shape[1] == cfg.max_nodes + 1
+    assert m.accuracy(xte, yte) > 0.6
+
+
+def test_oob_weights_in_unit_interval(class_data):
+    xtr, ytr, _, _ = class_data
+    cfg = ForestConfig(n_trees=8, max_depth=5, n_bins=16, n_classes=4)
+    m = train_prf(xtr, ytr, cfg, seed=1)
+    w = np.asarray(m.forest.tree_weight)
+    assert ((w >= 0) & (w <= 1)).all()
+    assert w.std() > 0  # trees genuinely differ
+
+
+def test_weighted_voting_improves_on_noisy_data():
+    x, y = make_classification(
+        n_samples=4000, n_features=120, n_classes=3, n_informative=8,
+        label_noise=0.2, seed=11,
+    )
+    xtr, ytr, xte, yte = train_test_split(x, y, 0.25, 0)
+    base = ForestConfig(n_trees=24, max_depth=6, n_bins=16, n_classes=3)
+    accs_w, accs_p = [], []
+    for s in range(3):
+        accs_w.append(train_prf(xtr, ytr, base, seed=s).accuracy(xte, yte))
+        accs_p.append(
+            train_prf(
+                xtr, ytr, dataclasses.replace(base, weighted_voting=False), seed=s
+            ).accuracy(xte, yte)
+        )
+    assert np.mean(accs_w) >= np.mean(accs_p) - 0.01   # weighting never hurts
+
+
+def test_prf_beats_rf_in_high_dim_regime():
+    """The paper's headline claim (Figs. 8-9): importance-guided dimension
+    reduction beats random-subspace RF on high-dimensional noisy data."""
+    x, y = make_classification(
+        n_samples=3000, n_features=800, n_classes=3, n_informative=8,
+        n_redundant=4, label_noise=0.1, class_sep=1.2, seed=7,
+    )
+    xtr, ytr, xte, yte = train_test_split(x, y, 0.25, 0)
+    cfg = ForestConfig(n_trees=16, max_depth=6, n_bins=16, n_classes=3)
+    acc_prf = train_prf(xtr, ytr, cfg, seed=0).accuracy(xte, yte)
+    acc_rf = train_rf(xtr, ytr, cfg, seed=0).accuracy(xte, yte)
+    assert acc_prf > acc_rf + 0.1, (acc_prf, acc_rf)
+
+
+def test_mlrf_sampling_degrades_with_small_budget(class_data):
+    xtr, ytr, xte, yte = class_data
+    cfg = ForestConfig(n_trees=16, max_depth=6, n_bins=32, n_classes=4)
+    acc_big = train_mlrf_like(xtr, ytr, cfg, seed=0, sample_budget=2000).accuracy(xte, yte)
+    acc_tiny = train_mlrf_like(xtr, ytr, cfg, seed=0, sample_budget=40).accuracy(xte, yte)
+    assert acc_big >= acc_tiny - 0.02
+
+
+def test_regression_r2():
+    x, y = make_regression(3000, 32, seed=5)
+    xtr, ytr, xte, yte = train_test_split(x, y, 0.25, 0)
+    cfg = ForestConfig(
+        n_trees=16, max_depth=6, n_bins=32, regression=True, feature_mode="all"
+    )
+    m = train_prf(xtr, ytr, cfg, seed=0)
+    pred = m.predict(xte)
+    r2 = 1 - np.mean((pred - yte) ** 2) / np.var(yte)
+    assert r2 > 0.6
+
+
+def test_data_volume_model_flat_in_k():
+    """Fig. 14: PRF volume ~flat in ensemble scale, RF linear."""
+    N, M = 100_000, 1000
+    v_rf_10 = data_volume_bytes("rf", N, M, 10)
+    v_rf_100 = data_volume_bytes("rf", N, M, 100)
+    assert v_rf_100 == 10 * v_rf_10                      # linear in k
+    v_paper_10 = data_volume_bytes("prf-paper", N, M, 10)
+    v_paper_100 = data_volume_bytes("prf-paper", N, M, 100)
+    assert v_paper_100 == v_paper_10                     # exactly flat (2NM)
+    v_prf_10 = data_volume_bytes("prf-tpu", N, M, 10)
+    v_prf_100 = data_volume_bytes("prf-tpu", N, M, 100)
+    assert v_prf_100 < 2 * v_prf_10                      # k*N counts only
+    assert v_prf_100 < v_rf_100 / 100                    # orders smaller than RF

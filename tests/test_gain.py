@@ -1,0 +1,90 @@
+"""Unit tests: entropy / gain ratio / variable importance (paper Eq. 2-7)."""
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.gain import (
+    best_splits, entropy_from_counts, multiway_gain_ratio,
+    split_gain_ratios, variable_importance,
+)
+
+
+def _entropy(counts):
+    n = sum(counts)
+    return -sum(c / n * math.log(c / n) for c in counts if c > 0)
+
+
+def test_entropy_matches_closed_form():
+    cases = [[10, 10], [1, 99], [25, 25, 25, 25], [5, 0, 5]]
+    for c in cases:
+        got = float(entropy_from_counts(jnp.asarray(c, jnp.float32)))
+        assert got == pytest.approx(_entropy(c), abs=1e-5)
+
+
+def test_entropy_bounds():
+    c = jnp.asarray([3.0, 7.0, 11.0, 2.0])
+    h = float(entropy_from_counts(c))
+    assert 0.0 <= h <= math.log(4) + 1e-6
+
+
+def test_split_gain_ratio_perfect_split():
+    """A feature that perfectly separates classes wins with max gain."""
+    # hist[F=2, B=2, C=2]; feature 0: bin0 -> class0, bin1 -> class1
+    hist = jnp.asarray([
+        [[10.0, 0.0], [0.0, 10.0]],   # perfect
+        [[5.0, 5.0], [5.0, 5.0]],     # useless
+    ])
+    gr = split_gain_ratios(hist)       # [F, B-1]
+    assert float(gr[0, 0]) == pytest.approx(math.log(2) / math.log(2), rel=1e-4)
+    assert float(gr[1, 0]) == pytest.approx(0.0, abs=1e-5)
+
+
+def test_split_gain_invalid_empty_side():
+    hist = jnp.asarray([[[10.0, 10.0], [0.0, 0.0]]])   # all mass in bin 0
+    gr = split_gain_ratios(hist)
+    assert np.isneginf(np.asarray(gr)[0, 0])
+
+
+def test_best_splits_respects_feature_mask():
+    hist = jnp.zeros((1, 1, 2, 2, 2))
+    hist = hist.at[0, 0, 0].set(jnp.asarray([[10.0, 0.0], [0.0, 10.0]]))
+    hist = hist.at[0, 0, 1].set(jnp.asarray([[8.0, 2.0], [2.0, 8.0]]))
+    mask = jnp.asarray([[False, True]])   # best feature masked out
+    s = best_splits(hist, mask)
+    assert int(s.feature[0, 0]) == 1
+
+
+def test_best_splits_child_counts_consistent():
+    rng = np.random.default_rng(0)
+    hist = jnp.asarray(rng.random((2, 3, 4, 8, 3)).astype(np.float32))
+    s = best_splits(hist, None)
+    total = hist.sum(axis=(-2,))          # [k, S, F, C]
+    for t in range(2):
+        for sl in range(3):
+            f = int(s.feature[t, sl])
+            np.testing.assert_allclose(
+                np.asarray(s.left_counts + s.right_counts)[t, sl],
+                np.asarray(total)[t, sl, f], rtol=1e-5,
+            )
+
+
+def test_multiway_gain_ratio_informative_feature_wins():
+    rng = np.random.default_rng(1)
+    N, B, C = 2000, 8, 3
+    y = rng.integers(0, C, N)
+    informative = (y * 2 + rng.integers(0, 2, N)) % B
+    noise = rng.integers(0, B, N)
+    hist = np.zeros((2, B, C), np.float32)
+    for f, col in enumerate([informative, noise]):
+        np.add.at(hist[f], (col, y), 1.0)
+    gr = multiway_gain_ratio(jnp.asarray(hist))
+    assert float(gr[0]) > float(gr[1]) + 0.1
+
+
+def test_variable_importance_normalizes():
+    gr = jnp.asarray([[0.5, 0.3, 0.2], [1.0, 0.0, 1.0]])
+    vi = variable_importance(gr)
+    np.testing.assert_allclose(np.asarray(vi).sum(-1), [1.0, 1.0], rtol=1e-5)
+    assert float(vi[0, 0]) == pytest.approx(0.5, rel=1e-5)

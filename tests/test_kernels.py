@@ -1,0 +1,98 @@
+"""Pallas kernel sweeps: shapes x dtypes vs pure-jnp oracles (interpret=True)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.kernel import attention_pallas_call
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.gain_ratio.kernel import hist_pallas_call
+from repro.kernels.gain_ratio.ref import histogram_ref
+from repro.kernels.ssd_scan.kernel import ssd_pallas_call
+from repro.kernels.ssd_scan.ref import ssd_ref
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("n,f,s,b,c,n_blk,f_blk", [
+    (256, 64, 2, 8, 2, 128, 32),
+    (512, 128, 4, 16, 8, 256, 64),
+    (512, 32, 1, 32, 4, 512, 32),
+    (1024, 64, 8, 8, 3, 256, 64),
+])
+def test_gain_ratio_histogram_sweep(n, f, s, b, c, n_blk, f_blk):
+    xb = RNG.integers(0, b, (n, f)).astype(np.int32)
+    w = RNG.random(n).astype(np.float32)
+    y = RNG.integers(0, c, n)
+    wch = w[:, None] * np.eye(c, dtype=np.float32)[y]
+    slot = RNG.integers(-1, s, n).astype(np.int32)
+    got = hist_pallas_call(
+        jnp.asarray(xb), jnp.asarray(wch), jnp.asarray(slot),
+        n_slots=s, n_bins=b, n_blk=n_blk, f_blk=f_blk, interpret=True,
+    )
+    want = histogram_ref(
+        jnp.asarray(xb), jnp.asarray(wch), jnp.asarray(slot), n_slots=s, n_bins=b
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("b,h,lq,lk,d,causal,window,dtype", [
+    (2, 4, 256, 256, 64, True, 0, np.float32),
+    (1, 2, 128, 384, 64, True, 0, np.float32),
+    (2, 2, 256, 256, 64, True, 128, np.float32),
+    (1, 2, 256, 256, 32, False, 0, np.float32),
+    (1, 2, 256, 256, 64, True, 0, np.dtype("bfloat16")),
+])
+def test_flash_attention_sweep(b, h, lq, lk, d, causal, window, dtype):
+    q = RNG.standard_normal((b * h, lq, d)).astype(np.float32)
+    k = RNG.standard_normal((b * h, lk, d)).astype(np.float32)
+    v = RNG.standard_normal((b * h, lk, d)).astype(np.float32)
+    qj = jnp.asarray(q).astype(dtype)
+    kj = jnp.asarray(k).astype(dtype)
+    vj = jnp.asarray(v).astype(dtype)
+    got = attention_pallas_call(
+        qj, kj, vj, causal=causal, window=window, bq=128, bkv=128, interpret=True
+    )
+    want = attention_ref(qj, kj, vj, causal=causal, window=window)
+    tol = 2e-5 if dtype == np.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+@pytest.mark.parametrize("bh,l,p,n,q", [
+    (2, 256, 64, 16, 128),
+    (3, 384, 32, 64, 128),
+    (1, 128, 64, 32, 64),
+    (2, 512, 32, 16, 128),
+])
+def test_ssd_scan_sweep(bh, l, p, n, q):
+    x = RNG.standard_normal((bh, l, p)).astype(np.float32)
+    loga = -np.abs(RNG.standard_normal((bh, l)).astype(np.float32)) * 0.5
+    b = RNG.standard_normal((bh, l, n)).astype(np.float32) * 0.3
+    c = RNG.standard_normal((bh, l, n)).astype(np.float32) * 0.3
+    y1, h1 = ssd_pallas_call(*map(jnp.asarray, (x, loga, b, c)), q_blk=q, interpret=True)
+    y2, h2 = ssd_ref(*map(jnp.asarray, (x, loga, b, c)))
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_kernel_matches_model_chunked_path():
+    """kernels/ssd_scan == models/mamba._ssd_chunked (same math)."""
+    from repro.models.mamba import _ssd_chunked
+
+    B, S, H, P, N = 1, 256, 2, 32, 16
+    x = RNG.standard_normal((B, S, H, P)).astype(np.float32)
+    loga = -np.abs(RNG.standard_normal((B, S, H)).astype(np.float32)) * 0.3
+    b = RNG.standard_normal((B, S, N)).astype(np.float32) * 0.3
+    c = RNG.standard_normal((B, S, N)).astype(np.float32) * 0.3
+    h0 = np.zeros((B, H, N, P), np.float32)
+    y_model, _ = _ssd_chunked(*map(jnp.asarray, (x, loga, b, c, h0)), chunk=128)
+    # kernel path: flatten (B, H) -> BH
+    xk = jnp.asarray(np.moveaxis(x, 2, 1).reshape(B * H, S, P))
+    lk = jnp.asarray(np.moveaxis(loga, 2, 1).reshape(B * H, S))
+    bk = jnp.asarray(np.repeat(b[:, None], H, 1).reshape(B * H, S, N))
+    ck = jnp.asarray(np.repeat(c[:, None], H, 1).reshape(B * H, S, N))
+    y_kern, _ = ssd_pallas_call(xk, lk, bk, ck, q_blk=128, interpret=True)
+    y_kern = np.moveaxis(np.asarray(y_kern).reshape(B, H, S, P), 1, 2)
+    np.testing.assert_allclose(np.asarray(y_model), y_kern, rtol=2e-4, atol=2e-4)

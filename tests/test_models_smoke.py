@@ -1,0 +1,111 @@
+"""Per-arch smoke tests (reduced configs): forward/train step + shapes + no NaNs,
+plus the teacher-forced decode == full-forward consistency check."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import all_configs
+from repro.models import build_model
+
+from conftest import reduce_cfg
+
+ARCHS = sorted(all_configs().keys())
+RNG = np.random.default_rng(0)
+
+
+def _batch(r, B, S):
+    batch = {
+        "tokens": jnp.asarray(RNG.integers(0, r.vocab_size, (B, S)), jnp.int32),
+        "targets": jnp.asarray(RNG.integers(0, r.vocab_size, (B, S)), jnp.int32),
+    }
+    if r.family == "vlm":
+        batch["vision_embeds"] = jnp.asarray(
+            RNG.standard_normal((B, r.vision_tokens, r.d_model)), jnp.float32
+        ) * 0.1
+    if r.family == "encdec":
+        batch["frames"] = jnp.asarray(
+            RNG.standard_normal((B, r.encoder_frames, r.d_model)), jnp.float32
+        ) * 0.1
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_and_decode(arch):
+    r = reduce_cfg(all_configs()[arch])
+    model = build_model(r)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 2, 16
+    batch = _batch(r, B, S)
+    loss, metrics = model.loss_fn(params, batch)
+    assert np.isfinite(float(loss)), arch
+    # gradient flows through every phase
+    g = jax.grad(lambda p: model.loss_fn(p, batch)[0])(params)
+    gn = sum(float(jnp.sum(jnp.abs(l))) for l in jax.tree_util.tree_leaves(g))
+    assert np.isfinite(gn) and gn > 0, arch
+
+    extras = {k: v for k, v in batch.items() if k in ("vision_embeds", "frames")}
+    logits, cache = model.prefill(params, batch["tokens"], extras, s_max=S + 4)
+    assert logits.shape == (B, r.vocab_size)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    logits2, cache = model.decode_step(params, cache, tok, jnp.int32(S))
+    assert logits2.shape == (B, r.vocab_size)
+    assert np.isfinite(np.asarray(logits2)).all(), arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_full_forward(arch):
+    """Teacher-forced incremental decode == one-shot forward (cache
+    correctness incl. rolling windows, SSM states, meta tokens)."""
+    r = reduce_cfg(all_configs()[arch])
+    model = build_model(r)
+    params = model.init(jax.random.PRNGKey(1))
+    B, S = 2, 20   # > local_window so rolling buffers engage
+    toks = jnp.asarray(RNG.integers(0, r.vocab_size, (B, S + 3)), jnp.int32)
+    extras = {
+        k: v for k, v in _batch(r, B, S).items()
+        if k in ("vision_embeds", "frames")
+    }
+    lg_full, _ = model.prefill(params, toks, extras, s_max=S + 8)
+    lg, cache = model.prefill(params, toks[:, :S], extras, s_max=S + 8)
+    for i in range(3):
+        lg, cache = model.decode_step(params, cache, toks[:, S + i], jnp.int32(S + i))
+    err = np.max(np.abs(np.asarray(lg) - np.asarray(lg_full)))
+    scale = np.max(np.abs(np.asarray(lg_full))) + 1e-9
+    assert err / scale < 5e-4, (arch, err / scale)
+
+
+def test_param_count_formulas_match_init():
+    """configs.param_count (used for roofline MODEL_FLOPS) ~ actual init."""
+    for arch in ARCHS:
+        r = reduce_cfg(all_configs()[arch])
+        model = build_model(r)
+        shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        actual = sum(
+            int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(shapes)
+        )
+        predicted = r.param_count()
+        assert abs(actual - predicted) / actual < 0.15, (
+            arch, actual, predicted
+        )
+
+
+def test_full_configs_param_counts_sane():
+    """Full (non-reduced) configs land near their nameplate sizes."""
+    expect = {
+        "smollm-135m": (0.10e9, 0.20e9),
+        "qwen1.5-4b": (3.0e9, 5.0e9),
+        "gemma3-12b": (9e9, 14e9),
+        "gemma3-27b": (21e9, 32e9),
+        "deepseek-moe-16b": (13e9, 20e9),
+        "deepseek-v3-671b": (560e9, 760e9),
+        "mamba2-780m": (0.6e9, 1.0e9),
+        "hymba-1.5b": (1.1e9, 2.0e9),
+        "whisper-large-v3": (1.2e9, 2.2e9),
+        "llama-3.2-vision-90b": (75e9, 105e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = all_configs()[arch].param_count()
+        assert lo < n < hi, (arch, n)

@@ -1,0 +1,96 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dsi import bootstrap_counts, dsi_counts, make_dsi
+from repro.core.gain import (
+    entropy_from_counts, multiway_gain_ratio, split_gain_ratios,
+    variable_importance,
+)
+from repro.kernels.gain_ratio.ref import histogram_ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(
+    counts=st.lists(st.floats(0.0, 1e4), min_size=2, max_size=8),
+)
+@settings(**SETTINGS)
+def test_entropy_nonnegative_and_bounded(counts):
+    c = jnp.asarray(counts, jnp.float32)
+    if float(c.sum()) <= 0:
+        return
+    h = float(entropy_from_counts(c))
+    assert -1e-5 <= h <= np.log(len(counts)) + 1e-4
+
+
+@given(
+    n=st.integers(2, 64), k=st.integers(1, 8),
+    seed=st.integers(0, 2 ** 16),
+)
+@settings(**SETTINGS)
+def test_dsi_counts_conserve_draws(n, k, seed):
+    counts = bootstrap_counts(jax.random.PRNGKey(seed), k, n)
+    s = np.asarray(counts).sum(axis=1)
+    np.testing.assert_allclose(s, n)
+    assert (np.asarray(counts) >= 0).all()
+
+
+@given(
+    seed=st.integers(0, 2 ** 16),
+    b=st.integers(2, 8), c=st.integers(2, 4), f=st.integers(1, 4),
+)
+@settings(**SETTINGS)
+def test_gain_ratio_invariant_to_count_scaling(seed, b, c, f):
+    """GR is a function of distributions — scaling all counts is a no-op."""
+    rng = np.random.default_rng(seed)
+    hist = jnp.asarray(rng.random((f, b, c)).astype(np.float32)) + 0.01
+    g1 = split_gain_ratios(hist)
+    g2 = split_gain_ratios(hist * 7.5)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=2e-3, atol=2e-5)
+
+
+@given(
+    seed=st.integers(0, 2 ** 16), f=st.integers(2, 6),
+)
+@settings(**SETTINGS)
+def test_variable_importance_is_distribution(seed, f):
+    rng = np.random.default_rng(seed)
+    gr = jnp.asarray(rng.random((3, f)).astype(np.float32))
+    vi = variable_importance(gr)
+    v = np.asarray(vi)
+    assert (v >= -1e-6).all()
+    np.testing.assert_allclose(v.sum(-1), 1.0, rtol=1e-4)
+
+
+@given(
+    seed=st.integers(0, 2 ** 16),
+    n=st.sampled_from([32, 64]), fdim=st.sampled_from([4, 8]),
+    s=st.integers(1, 3), b=st.sampled_from([4, 8]), c=st.integers(2, 4),
+)
+@settings(**SETTINGS)
+def test_histogram_mass_conservation(seed, n, fdim, s, b, c):
+    """Total histogram mass == total (unparked) weight, for every feature."""
+    rng = np.random.default_rng(seed)
+    xb = rng.integers(0, b, (n, fdim)).astype(np.int32)
+    w = rng.random(n).astype(np.float32)
+    y = rng.integers(0, c, n)
+    wch = w[:, None] * np.eye(c, dtype=np.float32)[y]
+    slot = rng.integers(-1, s, n).astype(np.int32)
+    hist = histogram_ref(
+        jnp.asarray(xb), jnp.asarray(wch), jnp.asarray(slot), n_slots=s, n_bins=b
+    )
+    live = w[slot >= 0].sum()
+    got = np.asarray(hist).sum(axis=(0, 2, 3))
+    np.testing.assert_allclose(got, live, rtol=1e-4)
+
+
+@given(seed=st.integers(0, 2 ** 16))
+@settings(**SETTINGS)
+def test_multiway_gr_nonnegative(seed):
+    rng = np.random.default_rng(seed)
+    hist = jnp.asarray(rng.random((3, 8, 3)).astype(np.float32))
+    gr = np.asarray(multiway_gain_ratio(hist))
+    assert (gr >= -1e-4).all()

@@ -1,0 +1,75 @@
+"""End-to-end behaviour tests: the paper's full pipeline + the LM driver
++ distributed PRF on a host-device mesh (run in a subprocess so the
+multi-device XLA flag never leaks into other tests)."""
+import json
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+
+from repro.core import ForestConfig, train_prf
+from repro.data.tabular import make_classification, train_test_split
+
+
+def test_paper_pipeline_end_to_end(class_data):
+    """bin -> DSI -> dimred -> grow -> OOB weights -> weighted vote."""
+    xtr, ytr, xte, yte = class_data
+    cfg = ForestConfig(n_trees=16, max_depth=6, n_bins=32, n_classes=4)
+    model = train_prf(xtr, ytr, cfg, seed=0)
+    acc = model.accuracy(xte, yte)
+    assert acc > 0.75
+    w = np.asarray(model.forest.tree_weight)
+    assert (w > 0.4).all() and (w < 1.0).all()
+
+
+def test_distributed_prf_matches_quality():
+    """Vertical-partition PRF on an 8-device host mesh reaches the same
+    accuracy band as the single-device trainer (stratified bootstrap)."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import json
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import ForestConfig
+        from repro.core.binning import bin_dataset, apply_bins
+        from repro.core.distributed import make_prf_train_fn, predict_sharded
+        from repro.data.tabular import make_classification, train_test_split
+
+        x, y = make_classification(n_samples=2048, n_features=64, n_classes=4, seed=1)
+        xtr, ytr, xte, yte = train_test_split(x, y, 0.25, 0)
+        cfg = ForestConfig(n_trees=16, max_depth=6, n_bins=32, n_classes=4)
+        xb, edges = bin_dataset(xtr, cfg.n_bins)
+        mesh = jax.make_mesh((4, 2), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        train_fn, _ = make_prf_train_fn(cfg, mesh)
+        forest = train_fn(jnp.asarray(xb[:1536]), jnp.asarray(ytr[:1536]),
+                          jax.random.PRNGKey(0))
+        xbte = apply_bins(jnp.asarray(xte), jnp.asarray(edges))
+        pred = predict_sharded(forest, xbte[:496], mesh)
+        acc = float(np.mean(np.asarray(pred) == yte[:496]))
+        print(json.dumps({"acc": acc}))
+    """)
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True, timeout=900,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    acc = json.loads(out.stdout.strip().splitlines()[-1])["acc"]
+    assert acc > 0.75, acc
+
+
+def test_dryrun_single_cell_subprocess():
+    """The dry-run machinery itself (512 virtual devices) on a small
+    cell — proves lower+compile+roofline runs green end to end."""
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "smollm-135m", "--shape", "decode_32k",
+         "--mesh", "single", "--out", "/tmp/dryrun_test"],
+        capture_output=True, text=True, timeout=1800,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "OK" in out.stdout
+    data = json.load(open("/tmp/dryrun_test/smollm-135m__decode_32k__16x16.json"))
+    assert data["status"] == "OK"
+    assert data["flops_per_device"] > 0
+    assert data["fits_hbm"]
