@@ -22,6 +22,7 @@ _CODE = textwrap.dedent("""
     import jax, jax.numpy as jnp
     from repro.core import ForestConfig
     from repro.core.distributed import make_prf_train_fn
+    from repro.launch.mesh import make_mesh
     from repro.roofline.analysis import analyze_hlo_text
 
     N, F, C = 1 << 14, 256, 4
@@ -32,8 +33,7 @@ _CODE = textwrap.dedent("""
         (2, (2, 1), "h"), (4, (4, 1), "h"), (8, (8, 1), "h"),
         (2, (1, 2), "v"), (4, (2, 2), "v"), (8, (2, 4), "v"),
     ]:
-        mesh = jax.make_mesh(shape, ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_mesh(shape, ("data", "model"))
         fn, _ = make_prf_train_fn(cfg, mesh)
         xb = jax.ShapeDtypeStruct((N, F), jnp.uint8)
         y = jax.ShapeDtypeStruct((N,), jnp.int32)

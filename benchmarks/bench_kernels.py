@@ -2,7 +2,10 @@
 
 On this CPU container interpret-mode timings measure Python emulation,
 NOT TPU performance — reported for completeness; correctness sweeps live
-in tests/test_kernels.py.
+in tests/test_kernels.py. The ``level_hist_*`` rows time the T_GR
+backend on the histogram shapes training actually builds (multi-tree,
+both backends, packed and unpacked) — the series BENCH_kernels.json
+tracks across PRs (see PERF.md).
 """
 import time
 
@@ -10,6 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.histograms import level_histograms
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.gain_ratio.ref import histogram_ref
 from repro.kernels.ssd_scan.ref import ssd_ref
@@ -23,9 +27,39 @@ def _time(fn, *args, reps=3):
     return (time.time() - t0) / reps * 1e6
 
 
-def run():
+def run_level_hist():
+    """Training-shaped T_GR benchmark: one level of a tree chunk."""
     rng = np.random.default_rng(0)
     rows = []
+    # A mid-level of grow_forest: tc trees, S live frontier slots.
+    tc, N, F, S, B, C = 4, 2048, 32, 4, 16, 4
+    xb = jnp.asarray(rng.integers(0, B, (N, F)).astype(np.uint8))
+    base = jnp.asarray(np.eye(C, dtype=np.float32)[rng.integers(0, C, N)])
+    w = jnp.asarray(rng.integers(0, 4, (tc, N)).astype(np.float32))
+    slot = jnp.asarray(rng.integers(-1, S, (tc, N)).astype(np.int32))
+    shape = f"tc={tc},N={N},F={F},S={S},B={B},C={C}"
+    for backend in ("segment_sum", "pallas"):
+        for packed in (False, True):
+            fn = jax.jit(
+                lambda a, b, c, d, _be=backend, _pk=packed: level_histograms(
+                    a, b, c, d, n_slots=S, n_bins=B,
+                    packed=_pk, backend=_be,
+                )
+            )
+            name = f"level_hist_{backend}" + ("_packed" if packed else "")
+            rows.append({
+                "bench": name,
+                "us_per_call": _time(fn, xb, base, w, slot),
+                "derived": shape,
+                "backend": backend,
+                "packed": packed,
+            })
+    return rows
+
+
+def run():
+    rng = np.random.default_rng(0)
+    rows = run_level_hist()
 
     N, F, S, B, C = 2048, 128, 4, 16, 4
     xb = jnp.asarray(rng.integers(0, B, (N, F)).astype(np.int32))

@@ -44,6 +44,7 @@ _SCALING = textwrap.dedent("""
     import jax, jax.numpy as jnp
     from repro.core import ForestConfig
     from repro.core.distributed import make_prf_train_fn
+    from repro.launch.mesh import make_mesh
     from repro.roofline.analysis import analyze_hlo_text
 
     N, F, C = 1 << 14, 256, 4
@@ -52,8 +53,7 @@ _SCALING = textwrap.dedent("""
     out = []
     for shape in [(1, 1), (2, 2), (4, 2), (4, 4) if False else (2, 4)]:
         n_dev = shape[0] * shape[1]
-        mesh = jax.make_mesh(shape, ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_mesh(shape, ("data", "model"))
         fn, _ = make_prf_train_fn(cfg, mesh)
         comp = fn.lower(jax.ShapeDtypeStruct((N, F), jnp.uint8),
                         jax.ShapeDtypeStruct((N,), jnp.int32),

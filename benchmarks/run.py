@@ -1,28 +1,48 @@
 """Benchmark aggregator — one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV lines (plus a JSON dump in
-artifacts/bench.json for EXPERIMENTS.md).
+artifacts/bench.json for EXPERIMENTS.md). The kernels suite is
+additionally written to ``BENCH_kernels.json`` at the repo root so the
+T_GR backend perf trajectory is tracked across PRs (see PERF.md).
+
+``--only SUITE`` runs a single suite (e.g. ``--only kernels``).
 """
+import argparse
 import json
 import os
 import sys
 import time
 
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
-def main() -> None:
+
+def main(argv=None) -> None:
     from . import bench_accuracy, bench_comm, bench_kernels, bench_oob, bench_time, bench_volume
+
+    parser = argparse.ArgumentParser()
+    parser.add_argument(
+        "--only", default=None,
+        help="run a single suite: accuracy|oob|volume|comm|time|kernels",
+    )
+    args = parser.parse_args(argv)
 
     all_rows = []
     suites = [
-        ("accuracy (Figs. 8-9)", bench_accuracy.run),
-        ("oob (Fig. 10/Table 5)", bench_oob.run),
-        ("volume (Fig. 14)", lambda: bench_volume.run() + bench_volume.run_measured()),
-        ("comm (Fig. 15)", bench_comm.run),
-        ("time/scaling (Figs. 11-13)", bench_time.run),
-        ("kernels", bench_kernels.run),
+        ("accuracy", "accuracy (Figs. 8-9)", bench_accuracy.run),
+        ("oob", "oob (Fig. 10/Table 5)", bench_oob.run),
+        ("volume", "volume (Fig. 14)", lambda: bench_volume.run() + bench_volume.run_measured()),
+        ("comm", "comm (Fig. 15)", bench_comm.run),
+        ("time", "time/scaling (Figs. 11-13)", bench_time.run),
+        ("kernels", "kernels", bench_kernels.run),
     ]
+    if args.only is not None:
+        suites = [s for s in suites if s[0] == args.only]
+        if not suites:
+            raise SystemExit(f"unknown suite {args.only!r}")
+
+    kernel_rows = None
     print("name,us_per_call,derived")
-    for title, fn in suites:
+    for key, title, fn in suites:
         t0 = time.time()
         try:
             rows = fn()
@@ -37,11 +57,30 @@ def main() -> None:
             }
             print(f"{name},{us:.1f},{json.dumps(derived)}")
         all_rows.extend(rows)
+        if key == "kernels":
+            kernel_rows = rows
         print(f"# suite '{title}' done in {time.time()-t0:.1f}s", file=sys.stderr)
 
-    os.makedirs("artifacts", exist_ok=True)
-    with open("artifacts/bench.json", "w") as f:
-        json.dump(all_rows, f, indent=2, default=str)
+    # Only a full run may replace the aggregate dump EXPERIMENTS.md reads;
+    # --only iterations must not clobber it with a partial row set.
+    if args.only is None:
+        os.makedirs("artifacts", exist_ok=True)
+        with open("artifacts/bench.json", "w") as f:
+            json.dump(all_rows, f, indent=2, default=str)
+
+    # Likewise, a failed kernels suite must not wipe the tracked perf
+    # trajectory at the repo root.
+    if kernel_rows is not None and not any("error" in r for r in kernel_rows):
+        import jax
+
+        payload = {
+            "jax_backend": jax.default_backend(),
+            "note": "interpret-mode Pallas timings off-TPU measure "
+                    "emulation, not hardware; track deltas per backend",
+            "rows": kernel_rows,
+        }
+        with open(os.path.join(_REPO_ROOT, "BENCH_kernels.json"), "w") as f:
+            json.dump(payload, f, indent=2, default=str)
 
 
 if __name__ == "__main__":

@@ -32,6 +32,7 @@ def main():
     from repro.core.binning import apply_bins, bin_dataset
     from repro.core.distributed import make_prf_train_fn, predict_sharded
     from repro.data.tabular import make_classification, train_test_split
+    from repro.launch.mesh import make_mesh
     from repro.roofline.analysis import analyze_hlo_text
 
     x, y = make_classification(n_samples=4096, n_features=64, n_classes=4, seed=1)
@@ -39,10 +40,7 @@ def main():
     cfg = ForestConfig(n_trees=args.trees, max_depth=6, n_bins=32, n_classes=4)
     xb, edges = bin_dataset(xtr, cfg.n_bins)
 
-    mesh = jax.make_mesh(
-        (args.data, args.model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    mesh = make_mesh((args.data, args.model), ("data", "model"))
     print(f"mesh: data={args.data} x model={args.model}")
     train_fn, _ = make_prf_train_fn(cfg, mesh)
 

@@ -32,7 +32,8 @@ def root_gain_ratios(
     base = class_channels(y, config.n_classes)
     slot0 = jnp.zeros((k, N), jnp.int32)
     hist = level_histograms(
-        x_binned, base, weights, slot0, n_slots=1, n_bins=config.n_bins
+        x_binned, base, weights, slot0, n_slots=1, n_bins=config.n_bins,
+        backend=config.hist_backend,
     )                                                    # [k, 1, F, B, C]
     return multiway_gain_ratio(hist[:, 0])               # [k, F]
 

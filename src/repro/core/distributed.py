@@ -35,6 +35,19 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+
+def _shard_map(f, *, mesh, in_specs, out_specs):
+    """shard_map across jax versions: `jax.shard_map(check_vma=)` on
+    >= 0.6, `jax.experimental.shard_map.shard_map(check_rep=)` before."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=False)
+    from jax.experimental.shard_map import shard_map as sm
+
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              check_rep=False)
+
 from .dsi import bootstrap_counts
 from .forest import _rank_splits, chunked_level_scores, init_forest
 from .gain import SplitScores, multiway_gain_ratio
@@ -42,11 +55,18 @@ from .histograms import class_channels, level_histograms, regression_channels
 from .types import Forest, ForestConfig
 
 
+def _axis_size(a: str) -> int:
+    """`jax.lax.axis_size` compat (absent before jax 0.5): psum of the
+    literal 1 over a named axis constant-folds to the axis size."""
+    fn = getattr(jax.lax, "axis_size", None)
+    return fn(a) if fn is not None else jax.lax.psum(1, a)
+
+
 def _multi_axis_index(axes: Sequence[str]) -> jnp.ndarray:
     """Linearized index over possibly-multiple mesh axes (row-major)."""
     idx = jnp.int32(0)
     for a in axes:
-        idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+        idx = idx * _axis_size(a) + jax.lax.axis_index(a)
     return idx
 
 
@@ -117,7 +137,7 @@ def _grow_sharded(
     use_rs = (
         config.hist_reduce == "psum_scatter"
         and len(sample_axes) == 1
-        and Fl % jax.lax.axis_size(sample_axes[0]) == 0
+        and Fl % _axis_size(sample_axes[0]) == 0
     )
     midx = jax.lax.axis_index(feature_axis)
 
@@ -131,7 +151,7 @@ def _grow_sharded(
                 )
 
             didx = jax.lax.axis_index(sample_axes[0])
-            d_size = jax.lax.axis_size(sample_axes[0])
+            d_size = _axis_size(sample_axes[0])
             fl_sub = Fl // d_size
             mask_src = (
                 mask_loc if mask_loc is not None
@@ -254,7 +274,8 @@ def _dimred_sharded(xb_loc, base_loc, w_loc, config, key, *, sample_axes, featur
     Fl = xb_loc.shape[1]
     slot0 = jnp.zeros((k, Nl), jnp.int32)
     hist = level_histograms(
-        xb_loc, base_loc, w_loc, slot0, n_slots=1, n_bins=config.n_bins
+        xb_loc, base_loc, w_loc, slot0, n_slots=1, n_bins=config.n_bins,
+        backend=config.hist_backend,
     )
     hist = jax.lax.psum(hist, sample_axes)
     gr_loc = multiway_gain_ratio(hist[:, 0])                         # [k, Fl]
@@ -347,12 +368,11 @@ def make_prf_train_fn(
                 forest = dataclasses.replace(forest, tree_weight=w)
             return forest
 
-        return jax.shard_map(
+        return _shard_map(
             kernel,
             mesh=mesh,
             in_specs=(x_spec, y_spec, P()),
             out_specs=P(),
-            check_vma=False,
         )(x_binned, y, key)
 
     in_shardings = (
@@ -382,10 +402,9 @@ def predict_sharded(forest: Forest, x_binned, mesh, *,
         scores = weighted_vote(probs, w, soft=forest.config.soft_voting)
         return jnp.argmax(scores, -1)
 
-    fn = jax.shard_map(
+    fn = _shard_map(
         kernel, mesh=mesh,
         in_specs=(P(sample_axes, feature_axis),),
         out_specs=P(sample_axes),
-        check_vma=False,
     )
     return jax.jit(fn)(x_binned)

@@ -82,6 +82,7 @@ def chunked_level_scores(
         hist = level_histograms(
             x_binned, base_channels, w_c, slot_c,
             n_slots=S, n_bins=config.n_bins, packed=packed,
+            backend=config.hist_backend,
         )
         if hist_reduce is not None:
             hist = hist_reduce(hist)     # psum over the sample axis (T_GR combine)

@@ -1,13 +1,33 @@
 """Weighted class-histogram construction — the T_GR workhorse (paper §4.2.1).
 
-Single-host reference path. The distributed path (core/distributed.py)
-calls the same function on each device's (sample-shard x feature-shard)
-block and psums over the sample axis; the Pallas kernel
-(kernels/gain_ratio) is the TPU-optimized drop-in for the inner loop.
+``level_histograms`` is the single entry point for every histogram the
+trainer builds (single-host ``grow_forest``, the sharded
+``_grow_sharded`` path, and dimension reduction). It dispatches between
+two backends, selected by ``ForestConfig.hist_backend``:
 
-The per-tree weight is applied *inside* the tree vmap so the [k, N, C]
-weighted-channel tensor is never materialized — ensemble growth costs
-k*N weights, not k*N*C activations (the DSI data-multiplexing property).
+* ``"segment_sum"`` — a per-tree, per-feature ``jax.ops.segment_sum``
+  vmap. XLA-native scatter; the portable oracle.
+* ``"pallas"`` — the fused MXU one-hot-matmul kernel
+  (``kernels/gain_ratio``): one ``pallas_call`` emits the whole
+  ``[tc, S, F, B, C]`` tensor for a chunk of trees, with the per-tree
+  DSI weight multiply fused into the kernel and padding/masking for
+  arbitrary ``N``/``F``. Runs in ``interpret`` mode off-TPU so the same
+  code path is testable on CPU.
+* ``"auto"`` — ``pallas`` when the default JAX backend is TPU, else
+  ``segment_sum``.
+
+Both backends apply the per-tree weight *inside* the per-tree step so
+the ``[k, N, C]`` weighted-channel tensor is never materialized —
+ensemble growth costs k*N weights, not k*N*C activations (the DSI
+data-multiplexing property). ``packed=True`` (classification-shaped
+one-hot channels only) additionally folds the class index into the
+scatter/one-hot index, so the inner loop reads the ``[N]`` weight vector
+instead of the ``[N, C]`` channel matrix — a C-fold cut of T_GR's
+dominant memory traffic (§Perf log, PERF.md).
+
+The distributed path (core/distributed.py) calls the same function on
+each device's (sample-shard x feature-shard) block and psums over the
+sample axis.
 """
 from __future__ import annotations
 
@@ -16,8 +36,24 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from ..kernels.gain_ratio.kernel import multi_tree_hist_pallas
 
-@partial(jax.jit, static_argnames=("n_slots", "n_bins", "packed"))
+BACKENDS = ("auto", "pallas", "segment_sum")
+
+
+def resolve_backend(backend: str) -> str:
+    """'auto' -> 'pallas' on TPU, 'segment_sum' elsewhere."""
+    if backend not in BACKENDS:
+        raise ValueError(f"hist_backend={backend!r} not in {BACKENDS}")
+    if backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "segment_sum"
+    return backend
+
+
+@partial(
+    jax.jit,
+    static_argnames=("n_slots", "n_bins", "packed", "backend", "interpret"),
+)
 def level_histograms(
     x_binned: jnp.ndarray,      # [N, F] uint8
     base_channels: jnp.ndarray, # [N, C] per-sample channel data (unweighted)
@@ -27,19 +63,30 @@ def level_histograms(
     n_slots: int,
     n_bins: int,
     packed: bool = False,
+    backend: str = "auto",
+    interpret: bool | None = None,
 ) -> jnp.ndarray:
     """hist[t,s,f,b,c] = sum_i w[t,i] * base[i,c] * [slot_i = s] * [x_if = b].
 
     ``base_channels`` is ``onehot(y)`` for classification or
-    ``[1, y, y^2]`` for regression — same kernel either way.
+    ``[1, y, y^2]`` for regression — same kernel either way (``packed``
+    requires the classification-shaped one-hot form).
 
-    ``packed=True`` (classification-shaped one-hot channels only): the
-    class index is folded INTO the segment id, so the per-feature scatter
-    reads the [N] weight vector instead of the [N, C] channel matrix —
-    a C-fold cut of the dominant memory traffic of T_GR (§Perf log).
+    ``interpret`` only affects the pallas backend; ``None`` means
+    interpret off-TPU, compiled on TPU.
 
     Returns: [k, S, F, B, C] float32.
     """
+    backend = resolve_backend(backend)
+    if backend == "pallas":
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        return multi_tree_hist_pallas(
+            x_binned, base_channels, weights, sample_slot,
+            n_slots=n_slots, n_bins=n_bins, packed=packed,
+            interpret=interpret,
+        )
+
     N, F = x_binned.shape
     C = base_channels.shape[-1]
     S, B = n_slots, n_bins

@@ -66,6 +66,10 @@ class ForestConfig:
     # --- §Perf optimizations (beyond-paper; see EXPERIMENTS.md §Perf) ------
     packed_hist: bool = False         # class index folded into segment ids
     hist_reduce: str = "psum"         # psum | psum_scatter (distributed T_GR)
+    # T_GR backend: "pallas" = fused MXU one-hot-matmul kernel
+    # (kernels/gain_ratio, interpret mode off-TPU), "segment_sum" = XLA
+    # scatter vmap, "auto" = pallas on TPU else segment_sum. See PERF.md.
+    hist_backend: str = "auto"
 
     @property
     def frontier(self) -> int:

@@ -1,1 +1,2 @@
+from .kernel import multi_tree_hist_pallas  # noqa: F401
 from .ops import fused_histogram  # noqa: F401

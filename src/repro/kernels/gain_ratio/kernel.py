@@ -1,24 +1,35 @@
-"""Pallas TPU kernel: fused weighted histogram for T_GR (paper §4.2.1).
+"""Pallas TPU kernel: fused weighted histograms for T_GR (paper §4.2.1).
 
-TPU adaptation of the paper's gain-ratio hot spot. A CPU worker scatters
-into histogram bins; TPUs have no fast scatter, so the kernel builds the
-histogram as **one-hot matmuls on the MXU**:
+This is the production backend of ``core/histograms.level_histograms``
+(selected by ``ForestConfig.hist_backend``), not a single-tree demo. A
+CPU worker scatters into histogram bins; TPUs have no fast scatter, so
+the kernel builds the histograms as **one-hot matmuls on the MXU**, for
+a whole *chunk of trees* per ``pallas_call``:
 
-    onehot(slot*B + bin_f)^T  [S*B, N_blk]  @  wch [N_blk, C]  ->  [S*B, C]
+  unpacked (channels) layout::
 
-Tiling:
-  grid = (F_blocks, N_blocks); the N axis is the innermost (sequential)
-  grid dimension, so the [S*B, C] accumulator tile for a feature block
-  stays resident in VMEM while sample blocks stream through (classic
-  reduction-grid pattern).
+      onehot(slot*B + bin_f)^T  [S*B, N_blk] @ (w_t * base) [N_blk, C]
+                                                        -> [S*B, C]
 
-VMEM working set per step (defaults N_blk=512, F_blk=128, S*B <= 2048,
-C <= 32):  bins 512x128 int32 (256 KiB) + wch 512x32 f32 (64 KiB)
-+ out 2048x128? no — out tile is [S, F_blk, B, C] laid out as
-[F_blk, S*B, C] scratch (128 * 2048 * 32 f32 = 32 MiB would NOT fit; we
-therefore loop features *inside* the block with a fori_loop and keep the
-out tile at [S*B, C] per feature, writing each feature's slab to the
-output ref as it completes).
+  packed (classification) layout — class folded into the one-hot index,
+  so the matmul reads the [N] weight *vector*, never an [N, C] channel
+  matrix (a C-fold cut of T_GR's dominant memory traffic)::
+
+      (w_t * wcls) [1, N_blk] @ onehot(slot*B*C + bin_f*C + cls)
+                                     [N_blk, S*B*C] -> [1, S*B*C]
+
+Grid: ``(tc, F_blocks, N_blocks)`` with the sample axis innermost
+(sequential), so each (tree, feature-block) accumulator tile stays
+resident in VMEM while sample blocks stream through — the classic
+reduction-grid pattern. The per-tree DSI weight multiply
+``w[t, i] * base[i, c]`` happens *inside* the kernel: the ``[tc, N, C]``
+weighted-channel tensor is never materialized anywhere.
+
+Arbitrary ``N``/``F`` are supported: inputs are padded up to the block
+grid with parked samples (``slot = -1`` -> zero weight) and dummy
+features (sliced off the output). Block sizes are auto-chosen from a
+VMEM budget as a function of the ``(S*B, C)`` accumulator footprint —
+see ``choose_blocks``.
 """
 from __future__ import annotations
 
@@ -28,26 +39,65 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+# Per-step VMEM working-set budget. ~16 MiB/core physical; half keeps
+# headroom for Pallas' double-buffered input pipelining.
+_VMEM_BUDGET = 8 * 2 ** 20
 
-def _hist_kernel(bins_ref, wch_ref, slot_ref, out_ref, *, n_slots, n_bins, f_blk):
-    """One (feature-block, sample-block) grid step."""
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def choose_blocks(
+    N: int, F: int, S: int, B: int, C: int, *, packed: bool,
+    n_blk: int | None = None, f_blk: int | None = None,
+    vmem_budget: int = _VMEM_BUDGET,
+) -> tuple[int, int]:
+    """Pick (n_blk, f_blk) so the per-step working set fits the budget.
+
+    Working set per grid step (f32 words):
+      out tile      f_blk * S*B * C          (resident accumulator)
+      one-hot       n_blk * W, W = S*B (unpacked) or S*B*C (packed)
+      bins block    n_blk * f_blk
+      channels      n_blk * C  (+ w, slot: 2 * n_blk)
+    """
+    width = S * B * C if packed else S * B
+    if f_blk is None:
+        f_blk = 128
+        while f_blk > 8 and f_blk * S * B * C * 4 > vmem_budget // 2:
+            f_blk //= 2
+    if n_blk is None:
+        n_blk = 512
+        while n_blk > 64 and n_blk * (width + f_blk + C + 2) * 4 > vmem_budget // 2:
+            n_blk //= 2
+    # Never pad beyond one block of the actual problem size.
+    n_blk = min(n_blk, _round_up(max(N, 1), 8))
+    f_blk = min(f_blk, _round_up(max(F, 1), 8))
+    return n_blk, f_blk
+
+
+def _hist_kernel_channels(
+    bins_ref, base_ref, w_ref, slot_ref, out_ref, *, n_slots, n_bins, f_blk
+):
+    """One (tree, feature-block, sample-block) grid step, [N, C] channels."""
     S, B = n_slots, n_bins
     SB = S * B
-    n_idx = pl.program_id(1)
+    n_idx = pl.program_id(2)
 
     @pl.when(n_idx == 0)
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    slot = slot_ref[...]                                  # [N_blk]
+    slot = slot_ref[0, :]                                 # [N_blk]
     parked = slot < 0
-    base = jnp.where(parked, 0, slot) * B                 # [N_blk]
-    # Parked samples contribute zero weight instead of a dump row so the
-    # one-hot matmul needs no extra segment.
-    wch = wch_ref[...] * (~parked)[:, None].astype(wch_ref.dtype)   # [N_blk, C]
+    seg0 = jnp.where(parked, 0, slot) * B                 # [N_blk]
+    # Fused DSI weight: parked/padded samples contribute zero weight, so
+    # the one-hot matmul needs no dump segment.
+    w = jnp.where(parked, 0.0, w_ref[0, :])               # [N_blk]
+    wch = base_ref[...] * w[:, None].astype(base_ref.dtype)  # [N_blk, C]
 
     def body(f, _):
-        idx = base + bins_ref[:, f].astype(jnp.int32)     # [N_blk]
+        idx = seg0 + bins_ref[:, f].astype(jnp.int32)     # [N_blk]
         onehot = (
             idx[:, None] == jax.lax.broadcasted_iota(jnp.int32, (1, SB), 1)
         ).astype(wch.dtype)                               # [N_blk, SB]
@@ -56,46 +106,150 @@ def _hist_kernel(bins_ref, wch_ref, slot_ref, out_ref, *, n_slots, n_bins, f_blk
             dimension_numbers=(((0,), (0,)), ((), ())),   # onehot^T @ wch
             preferred_element_type=jnp.float32,
         )                                                 # [SB, C]
-        out_ref[f, :, :] += acc
+        out_ref[0, f, :, :] += acc
         return 0
 
     jax.lax.fori_loop(0, f_blk, body, 0)
 
 
+def _hist_kernel_packed(
+    bins_ref, cls_ref, wcls_ref, w_ref, slot_ref, out_ref,
+    *, n_slots, n_bins, n_classes, f_blk
+):
+    """Packed grid step: class index folded into the one-hot column."""
+    S, B, C = n_slots, n_bins, n_classes
+    SBC = S * B * C
+    n_idx = pl.program_id(2)
+
+    @pl.when(n_idx == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    slot = slot_ref[0, :]                                 # [N_blk]
+    parked = slot < 0
+    seg0 = jnp.where(parked, 0, slot) * (B * C)
+    wv = jnp.where(parked, 0.0, w_ref[0, :] * wcls_ref[...])  # [N_blk]
+    cls = cls_ref[...].astype(jnp.int32)                  # [N_blk]
+
+    def body(f, _):
+        idx = seg0 + bins_ref[:, f].astype(jnp.int32) * C + cls
+        onehot = (
+            idx[:, None] == jax.lax.broadcasted_iota(jnp.int32, (1, SBC), 1)
+        ).astype(wv.dtype)                                # [N_blk, SBC]
+        acc = jax.lax.dot_general(
+            wv[None, :], onehot,
+            dimension_numbers=(((1,), (0,)), ((), ())),   # wv @ onehot
+            preferred_element_type=jnp.float32,
+        )                                                 # [1, SBC]
+        out_ref[0, f, :] += acc[0]
+        return 0
+
+    jax.lax.fori_loop(0, f_blk, body, 0)
+
+
+def multi_tree_hist_pallas(
+    x_bins: jnp.ndarray,    # [N, F] int (any int dtype)
+    base: jnp.ndarray,      # [N, C] float32 unweighted channels
+    w: jnp.ndarray,         # [tc, N] float32 per-tree DSI weights
+    slot: jnp.ndarray,      # [tc, N] int32 frontier slot, -1 = parked
+    *,
+    n_slots: int,
+    n_bins: int,
+    packed: bool = False,
+    n_blk: int | None = None,
+    f_blk: int | None = None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Fused multi-tree histograms. Returns [tc, S, F, B, C] float32."""
+    N, F = x_bins.shape
+    tc = w.shape[0]
+    C = base.shape[1]
+    S, B = n_slots, n_bins
+    n_blk, f_blk = choose_blocks(
+        N, F, S, B, C, packed=packed, n_blk=n_blk, f_blk=f_blk
+    )
+
+    Np, Fp = _round_up(N, n_blk), _round_up(F, f_blk)
+    if Np != N or Fp != F:
+        # Pad samples as parked (zero weight) and features as dummies
+        # (their histogram slabs are sliced off below).
+        x_bins = jnp.pad(x_bins, ((0, Np - N), (0, Fp - F)))
+        base = jnp.pad(base, ((0, Np - N), (0, 0)))
+        w = jnp.pad(w, ((0, 0), (0, Np - N)))
+        slot = jnp.pad(slot, ((0, 0), (0, Np - N)), constant_values=-1)
+
+    grid = (tc, Fp // f_blk, Np // n_blk)
+    bins_spec = pl.BlockSpec((n_blk, f_blk), lambda t, f, n: (n, f))
+    w_spec = pl.BlockSpec((1, n_blk), lambda t, f, n: (t, n))
+
+    if packed:
+        # Classification-shaped channels: base is (scaled) one-hot, so it
+        # is exactly (class index, per-sample scale) — computed once here,
+        # outside the (tree x feature) grid.
+        cls = jnp.argmax(base, axis=-1).astype(jnp.int32)   # [Np]
+        wcls = base.max(axis=-1)                            # [Np]
+        out = pl.pallas_call(
+            functools.partial(
+                _hist_kernel_packed,
+                n_slots=S, n_bins=B, n_classes=C, f_blk=f_blk,
+            ),
+            grid=grid,
+            in_specs=[
+                bins_spec,
+                pl.BlockSpec((n_blk,), lambda t, f, n: (n,)),   # cls
+                pl.BlockSpec((n_blk,), lambda t, f, n: (n,)),   # wcls
+                w_spec,                                         # w
+                w_spec,                                         # slot
+            ],
+            out_specs=pl.BlockSpec((1, f_blk, S * B * C), lambda t, f, n: (t, f, 0)),
+            out_shape=jax.ShapeDtypeStruct((tc, Fp, S * B * C), jnp.float32),
+            interpret=interpret,
+        )(x_bins.astype(jnp.int32), cls, wcls, w, slot)
+    else:
+        out = pl.pallas_call(
+            functools.partial(
+                _hist_kernel_channels, n_slots=S, n_bins=B, f_blk=f_blk
+            ),
+            grid=grid,
+            in_specs=[
+                bins_spec,
+                pl.BlockSpec((n_blk, C), lambda t, f, n: (n, 0)),  # base
+                w_spec,                                            # w
+                w_spec,                                            # slot
+            ],
+            out_specs=pl.BlockSpec(
+                (1, f_blk, S * B, C), lambda t, f, n: (t, f, 0, 0)
+            ),
+            out_shape=jax.ShapeDtypeStruct((tc, Fp, S * B, C), jnp.float32),
+            interpret=interpret,
+        )(x_bins.astype(jnp.int32), base, w, slot)
+
+    # [tc, Fp, S*B(*C)] -> [tc, S, F, B, C], dummy features sliced off.
+    hist = jnp.transpose(out.reshape(tc, Fp, S, B, C), (0, 2, 1, 3, 4))
+    return hist[:, :, :F]
+
+
 def hist_pallas_call(
     x_bins: jnp.ndarray,   # [N, F] int (any int dtype)
-    wch: jnp.ndarray,      # [N, C] float32
+    wch: jnp.ndarray,      # [N, C] float32 pre-weighted channels
     slot: jnp.ndarray,     # [N] int32
     *,
     n_slots: int,
     n_bins: int,
-    n_blk: int = 512,
-    f_blk: int = 128,
+    n_blk: int | None = None,
+    f_blk: int | None = None,
     interpret: bool = False,
 ) -> jnp.ndarray:
-    """Returns hist [S, F, B, C] float32."""
-    N, F = x_bins.shape
-    C = wch.shape[1]
-    S, B = n_slots, n_bins
-    n_blk = min(n_blk, N)
-    f_blk = min(f_blk, F)
-    if N % n_blk or F % f_blk:
-        raise ValueError(f"N={N} % n_blk={n_blk} or F={F} % f_blk={f_blk} != 0")
+    """Single-tree convenience wrapper. Returns hist [S, F, B, C] float32.
 
-    grid = (F // f_blk, N // n_blk)
-    out = pl.pallas_call(
-        functools.partial(
-            _hist_kernel, n_slots=S, n_bins=B, f_blk=f_blk
-        ),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((n_blk, f_blk), lambda f, n: (n, f)),   # bins
-            pl.BlockSpec((n_blk, C), lambda f, n: (n, 0)),       # wch
-            pl.BlockSpec((n_blk,), lambda f, n: (n,)),           # slot
-        ],
-        out_specs=pl.BlockSpec((f_blk, S * B, C), lambda f, n: (f, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((F, S * B, C), jnp.float32),
-        interpret=interpret,
-    )(x_bins.astype(jnp.int32), wch, slot)
-    # [F, S*B, C] -> [S, F, B, C]
-    return jnp.transpose(out.reshape(F, S, B, C), (1, 0, 2, 3))
+    ``wch`` carries the weights already folded in (the tree weight passed
+    to the kernel is 1); the multi-tree entry point is
+    ``multi_tree_hist_pallas``.
+    """
+    N = x_bins.shape[0]
+    ones = jnp.ones((1, N), jnp.float32)
+    return multi_tree_hist_pallas(
+        x_bins, wch, ones, slot[None],
+        n_slots=n_slots, n_bins=n_bins, packed=False,
+        n_blk=n_blk, f_blk=f_blk, interpret=interpret,
+    )[0]

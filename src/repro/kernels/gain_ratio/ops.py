@@ -1,4 +1,4 @@
-"""jit'd public wrapper for the fused T_GR histogram kernel."""
+"""jit'd public wrappers for the fused T_GR histogram kernel."""
 from __future__ import annotations
 
 from functools import partial
@@ -8,6 +8,11 @@ import jax.numpy as jnp
 
 from .kernel import hist_pallas_call
 from .ref import histogram_ref
+
+# The multi-tree production entry point is
+# core/histograms.level_histograms(backend="pallas"), which calls
+# kernel.multi_tree_hist_pallas directly and handles backend/interpret
+# resolution — no second jit wrapper here to keep in lockstep.
 
 
 @partial(
@@ -22,11 +27,11 @@ def fused_histogram(
     n_slots: int,
     n_bins: int,
     use_pallas: bool = True,
-    interpret: bool = True,     # CPU container: interpret; False on real TPU
-    n_blk: int = 512,
-    f_blk: int = 128,
+    interpret: bool = True,
+    n_blk: int | None = None,
+    f_blk: int | None = None,
 ) -> jnp.ndarray:
-    """hist [S, F, B, C]; Pallas on TPU, jnp oracle otherwise."""
+    """Single-tree hist [S, F, B, C]; Pallas on TPU, jnp oracle otherwise."""
     if not use_pallas:
         return histogram_ref(x_bins, wch, slot, n_slots=n_slots, n_bins=n_bins)
     return hist_pallas_call(

@@ -23,3 +23,25 @@ def histogram_ref(
         return out[: S * B].reshape(S, B, -1)
 
     return jnp.transpose(jax.vmap(per_feature, in_axes=1)(x_bins), (1, 0, 2, 3))
+
+
+def level_histogram_ref(
+    x_bins: jnp.ndarray,   # [N, F] integer bin ids
+    base: jnp.ndarray,     # [N, C] unweighted channels
+    w: jnp.ndarray,        # [tc, N] per-tree weights
+    slot: jnp.ndarray,     # [tc, N] int32 frontier slot, -1 = parked
+    *,
+    n_slots: int,
+    n_bins: int,
+) -> jnp.ndarray:
+    """Multi-tree oracle: per-tree histogram_ref with the weight folded in.
+
+    Returns [tc, S, F, B, C] — the same contract as the Pallas backend.
+    """
+
+    def per_tree(w_t, slot_t):
+        return histogram_ref(
+            x_bins, w_t[:, None] * base, slot_t, n_slots=n_slots, n_bins=n_bins
+        )
+
+    return jax.vmap(per_tree)(w, slot)

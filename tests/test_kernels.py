@@ -18,6 +18,8 @@ RNG = np.random.default_rng(0)
     (512, 128, 4, 16, 8, 256, 64),
     (512, 32, 1, 32, 4, 512, 32),
     (1024, 64, 8, 8, 3, 256, 64),
+    (300, 40, 3, 8, 2, 128, 32),   # non-divisible N/F: padded inside the call
+    (700, 24, 4, 16, 5, None, None),  # auto-chosen block sizes
 ])
 def test_gain_ratio_histogram_sweep(n, f, s, b, c, n_blk, f_blk):
     xb = RNG.integers(0, b, (n, f)).astype(np.int32)

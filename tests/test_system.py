@@ -35,13 +35,13 @@ def test_distributed_prf_matches_quality():
         from repro.core.binning import bin_dataset, apply_bins
         from repro.core.distributed import make_prf_train_fn, predict_sharded
         from repro.data.tabular import make_classification, train_test_split
+        from repro.launch.mesh import make_mesh
 
         x, y = make_classification(n_samples=2048, n_features=64, n_classes=4, seed=1)
         xtr, ytr, xte, yte = train_test_split(x, y, 0.25, 0)
         cfg = ForestConfig(n_trees=16, max_depth=6, n_bins=32, n_classes=4)
         xb, edges = bin_dataset(xtr, cfg.n_bins)
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_mesh((4, 2), ("data", "model"))
         train_fn, _ = make_prf_train_fn(cfg, mesh)
         forest = train_fn(jnp.asarray(xb[:1536]), jnp.asarray(ytr[:1536]),
                           jax.random.PRNGKey(0))
