@@ -4,19 +4,31 @@ On this CPU container interpret-mode timings measure Python emulation,
 NOT TPU performance — reported for completeness; correctness sweeps live
 in tests/test_kernels.py. The ``level_hist_*`` rows time the T_GR
 backend on the histogram shapes training actually builds (multi-tree,
-both backends, packed and unpacked) — the series BENCH_kernels.json
-tracks across PRs (see PERF.md).
+both backends, packed and unpacked); ``level_scores_*`` times the T_NS
+split-scoring backends on the same shapes, and ``hist_score_fused_*``
+the end-to-end T_GR->T_NS chunk (fused no-HBM-histogram path vs the
+two-tensor xla path) — the series BENCH_kernels.json tracks across PRs
+(see PERF.md).
 """
+import dataclasses
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.forest import chunked_level_scores
+from repro.core.gain import level_scores
 from repro.core.histograms import level_histograms
+from repro.core.types import ForestConfig
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.gain_ratio.ref import histogram_ref
 from repro.kernels.ssd_scan.ref import ssd_ref
+
+# The training shape every suite row below uses: a mid-level of
+# grow_forest — tc trees, S live frontier slots.
+TC, N, F, S, B, C = 4, 2048, 32, 4, 16, 4
+SHAPE = f"tc={TC},N={N},F={F},S={S},B={B},C={C}"
 
 
 def _time(fn, *args, reps=3):
@@ -27,17 +39,19 @@ def _time(fn, *args, reps=3):
     return (time.time() - t0) / reps * 1e6
 
 
+def _training_batch(rng):
+    xb = jnp.asarray(rng.integers(0, B, (N, F)).astype(np.uint8))
+    base = jnp.asarray(np.eye(C, dtype=np.float32)[rng.integers(0, C, N)])
+    w = jnp.asarray(rng.integers(0, 4, (TC, N)).astype(np.float32))
+    slot = jnp.asarray(rng.integers(-1, S, (TC, N)).astype(np.int32))
+    return xb, base, w, slot
+
+
 def run_level_hist():
     """Training-shaped T_GR benchmark: one level of a tree chunk."""
     rng = np.random.default_rng(0)
     rows = []
-    # A mid-level of grow_forest: tc trees, S live frontier slots.
-    tc, N, F, S, B, C = 4, 2048, 32, 4, 16, 4
-    xb = jnp.asarray(rng.integers(0, B, (N, F)).astype(np.uint8))
-    base = jnp.asarray(np.eye(C, dtype=np.float32)[rng.integers(0, C, N)])
-    w = jnp.asarray(rng.integers(0, 4, (tc, N)).astype(np.float32))
-    slot = jnp.asarray(rng.integers(-1, S, (tc, N)).astype(np.int32))
-    shape = f"tc={tc},N={N},F={F},S={S},B={B},C={C}"
+    xb, base, w, slot = _training_batch(rng)
     for backend in ("segment_sum", "pallas"):
         for packed in (False, True):
             fn = jax.jit(
@@ -50,16 +64,57 @@ def run_level_hist():
             rows.append({
                 "bench": name,
                 "us_per_call": _time(fn, xb, base, w, slot),
-                "derived": shape,
+                "derived": SHAPE,
                 "backend": backend,
                 "packed": packed,
             })
     return rows
 
 
+def run_level_scores():
+    """T_NS split-scoring backends on a pre-built training-shaped
+    histogram, plus the end-to-end T_GR->T_NS chunk: the fused
+    hist-kernel -> score-kernel path (no HBM histogram) vs the
+    two-tensor xla path."""
+    rng = np.random.default_rng(1)
+    rows = []
+    hist = jnp.asarray(rng.integers(0, 4, (TC, S, F, B, C)).astype(np.float32))
+    mask = jnp.ones((TC, F), jnp.bool_)
+    for be in ("xla", "pallas"):
+        fn = jax.jit(
+            lambda h, m, _be=be: level_scores(h, m, backend=_be)
+        )
+        rows.append({
+            "bench": f"level_scores_{be}",
+            "us_per_call": _time(fn, hist, mask),
+            "derived": SHAPE,
+            "backend": be,
+        })
+
+    xb, base, w, slot = _training_batch(rng)
+    cfg0 = ForestConfig(
+        n_trees=TC, max_depth=2, n_bins=B, n_classes=C,
+        max_frontier=S, feature_mode="all",
+    )
+    for be in ("xla", "pallas"):
+        cfg = dataclasses.replace(cfg0, split_backend=be)
+        fn = jax.jit(
+            lambda a, b, c, d, _cfg=cfg: chunked_level_scores(
+                a, b, c, d, None, _cfg
+            )
+        )
+        rows.append({
+            "bench": f"hist_score_fused_{be}",
+            "us_per_call": _time(fn, xb, base, w, slot),
+            "derived": SHAPE,
+            "backend": be,
+        })
+    return rows
+
+
 def run():
     rng = np.random.default_rng(0)
-    rows = run_level_hist()
+    rows = run_level_hist() + run_level_scores()
 
     N, F, S, B, C = 2048, 128, 4, 16, 4
     xb = jnp.asarray(rng.integers(0, B, (N, F)).astype(np.int32))

@@ -20,22 +20,45 @@ import jax
 import jax.numpy as jnp
 
 from .gain import multiway_gain_ratio, variable_importance
-from .histograms import class_channels, level_histograms
+from .histograms import class_channels, hist_feature_slab, level_histograms
 from .types import ForestConfig
 
 
 def root_gain_ratios(
     x_binned: jnp.ndarray, y: jnp.ndarray, weights: jnp.ndarray, config: ForestConfig
 ) -> jnp.ndarray:
-    """GR(y_ij) of every feature on every tree's bootstrap sample. [k, F]."""
+    """GR(y_ij) of every feature on every tree's bootstrap sample. [k, F].
+
+    Swept one ``hist_feature_slab``-wide feature block at a time: the
+    multiway gain ratio is per-feature, so the root histogram reduces to
+    [k, F] without the [k, 1, F, B, C] tensor ever existing beyond one
+    slab (same discipline as ``forest.fused_level_scores``).
+    """
     k, N = weights.shape
+    F = x_binned.shape[1]
+    B = config.n_bins
     base = class_channels(y, config.n_classes)
     slot0 = jnp.zeros((k, N), jnp.int32)
-    hist = level_histograms(
-        x_binned, base, weights, slot0, n_slots=1, n_bins=config.n_bins,
-        backend=config.hist_backend,
-    )                                                    # [k, 1, F, B, C]
-    return multiway_gain_ratio(hist[:, 0])               # [k, F]
+    W = hist_feature_slab(N, F, 1, B, config.n_classes)
+
+    def slab_gr(xb_s):                                   # [N, W] -> [k, W]
+        hist = level_histograms(
+            xb_s, base, weights, slot0, n_slots=1, n_bins=B,
+            backend=config.hist_backend,
+        )                                                # [k, 1, W, B, C]
+        return multiway_gain_ratio(hist[:, 0])
+
+    if W >= F:
+        return slab_gr(x_binned)                         # single slab
+    from ..kernels.gain_ratio.kernel import _round_up
+
+    Fp = _round_up(F, W)
+    xb = jnp.pad(x_binned, ((0, 0), (0, Fp - F)))
+    gr = jax.lax.map(
+        lambda j: slab_gr(jax.lax.dynamic_slice_in_dim(xb, j * W, W, axis=1)),
+        jnp.arange(Fp // W),
+    )                                                    # [Fp/W, k, W]
+    return jnp.moveaxis(gr, 0, 1).reshape(k, Fp)[:, :F]
 
 
 @partial(jax.jit, static_argnames=("n_selected", "n_important"))

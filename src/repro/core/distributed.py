@@ -15,10 +15,15 @@ Communication structure (== the paper's task DAG, §4.2):
          Features never move; gain-ratio math is local to feature shards
          (paper: "tasks dispatched to the slaves where the subset is
          located", LocalScheduler).
-  T_NS   winner selection across feature shards: an ``all_gather`` of the
-         [k, S] per-shard best gain ratios + masked ``psum``s of the tiny
-         winner descriptors and the per-sample go-left/right bits
-         (paper: ClusterScheduler synchronization point).
+  T_NS   each shard scores its own post-combine feature slice with the
+         split backend selected by ``config.split_backend`` (the fused
+         pallas split-scan kernel on TPU — histogram slabs consumed in
+         VMEM, only per-(tree, slot) winners emerge), then winners are
+         argmax-merged across shards: an ``all_gather`` of the [k, S]
+         per-shard best gain ratios + masked ``psum``s of the tiny
+         O(k*S) winner descriptors and the per-sample go-left/right bits
+         (paper: ClusterScheduler synchronization point). Histogram
+         slabs are never shipped to a central scorer.
 
 Bootstrap is *stratified per sample-shard* (each shard draws N_local of
 its own N_local rows): the Spark implementation samples globally; the
@@ -49,7 +54,9 @@ def _shard_map(f, *, mesh, in_specs, out_specs):
               check_rep=False)
 
 from .dsi import bootstrap_counts
-from .forest import _rank_splits, chunked_level_scores, init_forest
+from .forest import (
+    _gather_feature_bins, _rank_splits, chunked_level_scores, init_forest,
+)
 from .gain import SplitScores, multiway_gain_ratio
 from .histograms import class_channels, level_histograms, regression_channels
 from .types import Forest, ForestConfig
@@ -139,7 +146,6 @@ def _grow_sharded(
         and len(sample_axes) == 1
         and Fl % _axis_size(sample_axes[0]) == 0
     )
-    midx = jax.lax.axis_index(feature_axis)
 
     def level_step(carry, level):
         forest, slot_node, sample_slot = carry
@@ -221,11 +227,7 @@ def _grow_sharded(
         thr_i = jnp.take_along_axis(scores.threshold, s_safe, 1)
         f_shard = f_i // Fl
         f_here = jnp.where(f_shard == midx, f_i - midx * Fl, 0)
-        bins_i = jax.vmap(
-            lambda fr: jnp.take_along_axis(
-                xb_loc.astype(jnp.int32), fr[:, None], axis=1
-            )[:, 0]
-        )(f_here)
+        bins_i = _gather_feature_bins(xb_loc, f_here)                # [k, Nl]
         go_loc = jnp.where(f_shard == midx, (bins_i > thr_i).astype(jnp.int32), 0)
         go_right = jax.lax.psum(go_loc, feature_axis)                # [k, Nl]
         new_slot = jnp.where(live & (rank_i >= 0), 2 * rank_i + go_right, -1)
@@ -254,9 +256,7 @@ def _route_sharded(forest: Forest, xb_loc, *, feature_axis: str):
         leaf = f < 0
         f_shard = jnp.where(leaf, -1, f // Fl)
         f_here = jnp.where(f_shard == midx, f - midx * Fl, 0)
-        b = jax.vmap(
-            lambda fr: jnp.take_along_axis(xb, fr[:, None], 1)[:, 0]
-        )(f_here)
+        b = _gather_feature_bins(xb, f_here)
         thr = jnp.take_along_axis(forest.threshold, node, 1)
         go_loc = jnp.where(f_shard == midx, (b > thr).astype(jnp.int32), 0)
         go = jax.lax.psum(go_loc, feature_axis)

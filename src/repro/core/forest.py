@@ -24,8 +24,10 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from .gain import SplitScores, level_scores
-from .histograms import class_channels, level_histograms, regression_channels
+from .gain import SplitScores, level_scores, node_counts, resolve_split_backend
+from .histograms import (
+    class_channels, hist_feature_slab, level_histograms, regression_channels,
+)
 from .types import Forest, ForestConfig
 
 
@@ -43,6 +45,16 @@ def init_forest(config: ForestConfig) -> Forest:
     )
 
 
+def _gather_feature_bins(xb: jnp.ndarray, f: jnp.ndarray) -> jnp.ndarray:
+    """bins[t, i] = xb[i, f[t, i]] as ONE flattened gather.
+
+    Replaces the per-tree ``vmap(take_along_axis)`` that re-materialized
+    a [k, N] int32 gather per call site per level: broadcasting the row
+    index over the tree axis lowers to a single gather of [k, N] pairs.
+    """
+    return xb.astype(jnp.int32)[jnp.arange(xb.shape[0])[None, :], f]
+
+
 def _rank_splits(gain: jnp.ndarray, valid: jnp.ndarray, n_max: int) -> jnp.ndarray:
     """Beam selection: rank valid slots by gain, admit top n_max.
 
@@ -53,6 +65,60 @@ def _rank_splits(gain: jnp.ndarray, valid: jnp.ndarray, n_max: int) -> jnp.ndarr
     pos = jnp.argsort(order, axis=-1).astype(jnp.int32)        # rank of each slot
     admitted = valid & (pos < n_max)
     return jnp.where(admitted, pos, -1)
+
+
+def fused_level_scores(
+    x_binned: jnp.ndarray,       # [N, F] uint8
+    base_channels: jnp.ndarray,  # [N, C]
+    weights: jnp.ndarray,        # [tc, N]
+    sample_slot: jnp.ndarray,    # [tc, N]
+    feature_mask: Optional[jnp.ndarray],  # [tc, F] bool or None
+    config: ForestConfig,
+):
+    """Fully-fused T_GR -> T_NS: histogram kernel -> split-scan kernel
+    per feature slab; the ``[tc, S, F, B, C]`` histogram never exists in
+    HBM. Peak histogram footprint is one ``[tc, S, W, B, C]`` slab,
+    where ``W = hist_feature_slab(...)`` is the hist kernel's own
+    feature block — so per-slab pallas histograms are bit-identical to
+    slices of the unfused call, and so are the resulting forests.
+
+    The T_NS argmax rides along as the split-scan kernel's running-best
+    carry, threaded through the slab loop; only O(tc*S) descriptors
+    survive. Returns (SplitScores, n_node [tc, S]).
+    """
+    from ..kernels.gain_ratio.kernel import _round_up
+    from ..kernels.split_scan.kernel import init_carry, split_scan_block
+
+    tc = weights.shape[0]
+    N, F = x_binned.shape
+    S, B = config.frontier, config.n_bins
+    C = base_channels.shape[-1]
+    packed = config.packed_hist and not config.regression
+    W = hist_feature_slab(N, F, S, B, C, packed=packed)
+    Fp = _round_up(F, W)
+    xb = jnp.pad(x_binned, ((0, 0), (0, Fp - F)))
+    mask = (
+        feature_mask if feature_mask is not None else jnp.ones((tc, F), jnp.bool_)
+    )
+    mask = jnp.pad(mask, ((0, 0), (0, Fp - F)))   # padded features masked out
+    interpret = jax.default_backend() != "tpu"
+
+    def slab(j, carry):
+        f0 = j * W
+        xb_s = jax.lax.dynamic_slice_in_dim(xb, f0, W, axis=1)
+        mask_s = jax.lax.dynamic_slice_in_dim(mask, f0, W, axis=1)
+        hist = level_histograms(
+            xb_s, base_channels, weights, sample_slot,
+            n_slots=S, n_bins=B, packed=packed, backend=config.hist_backend,
+        )
+        return split_scan_block(
+            hist, mask_s, carry, f0,
+            regression=config.regression, interpret=interpret,
+        )
+
+    carry = jax.lax.fori_loop(0, Fp // W, slab, init_carry(tc, S, C))
+    scores = SplitScores(*carry)
+    return scores, node_counts(scores, regression=config.regression)
 
 
 def chunked_level_scores(
@@ -69,6 +135,11 @@ def chunked_level_scores(
 
     The histogram tensor only ever exists for ``tree_chunk`` trees at a
     time; only the O(k*S) split descriptors survive the chunk loop.
+    With ``split_backend="pallas"`` on the single-host path
+    (``hist_reduce is None``) the chunk runs ``fused_level_scores`` and
+    the histogram never exists at all beyond one feature slab; the
+    distributed path still combines full feature-shard histograms
+    (psum / psum_scatter) and applies the fused scorer post-combine.
     Returns (SplitScores [k, S, ...], n_node [k, S]).
     """
     k = config.n_trees
@@ -77,8 +148,13 @@ def chunked_level_scores(
     tc = min(tc, k)
 
     packed = config.packed_hist and not config.regression
+    split_be = resolve_split_backend(config.split_backend)
 
     def score_chunk(w_c, slot_c, mask_c):
+        if hist_reduce is None and split_be == "pallas":
+            return fused_level_scores(
+                x_binned, base_channels, w_c, slot_c, mask_c, config
+            )
         hist = level_histograms(
             x_binned, base_channels, w_c, slot_c,
             n_slots=S, n_bins=config.n_bins, packed=packed,
@@ -86,7 +162,9 @@ def chunked_level_scores(
         )
         if hist_reduce is not None:
             hist = hist_reduce(hist)     # psum over the sample axis (T_GR combine)
-        return level_scores(hist, mask_c, regression=config.regression)
+        return level_scores(
+            hist, mask_c, regression=config.regression, backend=split_be
+        )
 
     if tc >= k:
         return score_chunk(weights, sample_slot, feature_mask)
@@ -208,11 +286,7 @@ def _grow_forest_impl(x_binned, y, weights, config, feature_mask):
         rank_i = jnp.take_along_axis(split_rank, s_safe, 1)            # [k, N]
         f_i = jnp.take_along_axis(scores.feature, s_safe, 1)
         thr_i = jnp.take_along_axis(scores.threshold, s_safe, 1)
-        bins_i = jax.vmap(
-            lambda f_row: jnp.take_along_axis(
-                x_binned.astype(jnp.int32), f_row[:, None], axis=1
-            )[:, 0]
-        )(f_i)
+        bins_i = _gather_feature_bins(x_binned, f_i)                   # [k, N]
         go_right = (bins_i > thr_i).astype(jnp.int32)
         new_slot = jnp.where(live & (rank_i >= 0), 2 * rank_i + go_right, -1)
 
@@ -246,7 +320,7 @@ def route_to_leaves(forest: Forest, x_binned: jnp.ndarray) -> jnp.ndarray:
         f = jnp.take_along_axis(forest.feature, node, 1)               # [k, N]
         leaf = f < 0
         f_safe = jnp.where(leaf, 0, f)
-        b = jax.vmap(lambda fr: jnp.take_along_axis(xb, fr[:, None], 1)[:, 0])(f_safe)
+        b = _gather_feature_bins(xb, f_safe)
         thr = jnp.take_along_axis(forest.threshold, node, 1)
         lc = jnp.take_along_axis(forest.left_child, node, 1)
         nxt = lc + (b > thr).astype(jnp.int32)

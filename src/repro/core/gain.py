@@ -12,6 +12,20 @@ of every feature simultaneously; Eq. 2-6 then reduce those to a gain
 ratio per (tree, node, feature, threshold). The only cross-device
 communication this ever needs is a psum of `hist` over the sample axis
 (see core/distributed.py) — the vertical-partition property.
+
+The split-scoring stage (T_NS stage 1) has two backends, selected by
+``ForestConfig.split_backend`` and dispatched by ``level_scores``:
+
+* ``"xla"``    — the vectorized jnp path below (portable oracle);
+* ``"pallas"`` — the fused split-scan kernel (``kernels/split_scan``)
+  that consumes the histogram per feature block and keeps a running-best
+  carry, so only O(k*S) split descriptors ever leave the kernel;
+* ``"auto"``   — ``pallas`` on TPU, else ``xla``.
+
+Both backends score *from one shared cumsum* of the histogram
+(``split_gain_ratios_from_cumsum`` / ``variance_gains_from_cumsum``):
+the prefix sums that produce the gain ratios are re-used for the winner's
+child counts, so the bin axis is only scanned once.
 """
 from __future__ import annotations
 
@@ -47,20 +61,20 @@ class SplitScores(NamedTuple):
     right_counts: jnp.ndarray  # [k, S, C] class counts of right child
 
 
-def split_gain_ratios(hist: jnp.ndarray) -> jnp.ndarray:
-    """Gain ratio of every candidate split. Eq. (2)-(6), vectorized.
+def split_gain_ratios_from_cumsum(cum: jnp.ndarray, total: jnp.ndarray) -> jnp.ndarray:
+    """Eq. (2)-(6) from bin prefix sums — shared by the XLA and Pallas
+    split backends so their gain ratios are bit-identical.
 
     Args:
-      hist: [..., F, B, C] weighted class histograms of one node subset.
+      cum:   [..., F, B, C] ``cumsum(hist, axis=-2)``.
+      total: [..., F, C] node class counts (``cum[..., -1, :]``).
     Returns:
-      gr: [..., F, B-1] gain ratio of splitting feature f at threshold b
-          (left = bins 0..b). Invalid (empty-side) splits get -inf.
+      gr: [..., F, B-1]; invalid (empty-side) splits get -inf.
     """
-    total = hist.sum(axis=-2)                       # [..., F, C] node class counts
     n = total.sum(axis=-1)                          # [..., F]
     h_node = entropy_from_counts(total)             # [..., F]  Entropy(S_i), Eq. 2
 
-    left = jnp.cumsum(hist, axis=-2)[..., :-1, :]   # [..., F, B-1, C]
+    left = cum[..., :-1, :]                         # [..., F, B-1, C]
     right = total[..., None, :] - left              # [..., F, B-1, C]
     n_l = left.sum(-1)                              # [..., F, B-1]
     n_r = right.sum(-1)
@@ -82,28 +96,73 @@ def split_gain_ratios(hist: jnp.ndarray) -> jnp.ndarray:
     return jnp.where(valid, gr, -jnp.inf)
 
 
+def split_gain_ratios(hist: jnp.ndarray) -> jnp.ndarray:
+    """Gain ratio of every candidate split. Eq. (2)-(6), vectorized.
+
+    Args:
+      hist: [..., F, B, C] weighted class histograms of one node subset.
+    Returns:
+      gr: [..., F, B-1] gain ratio of splitting feature f at threshold b
+          (left = bins 0..b). Invalid (empty-side) splits get -inf.
+    """
+    cum = jnp.cumsum(hist, axis=-2)
+    return split_gain_ratios_from_cumsum(cum, cum[..., -1, :])
+
+
+def variance_gains_from_cumsum(cum: jnp.ndarray, total: jnp.ndarray) -> jnp.ndarray:
+    """Regression analogue of ``split_gain_ratios_from_cumsum``.
+
+    Args:
+      cum:   [..., F, B, 3] prefix sums of the [count, sum, sumsq] channels.
+      total: [..., F, 3].
+    Returns: [..., F, B-1] variance reduction (invalid -> -inf).
+    """
+
+    def sse(h):
+        return h[..., 2] - h[..., 1] * h[..., 1] / jnp.maximum(h[..., 0], 1e-38)
+
+    left = cum[..., :-1, :]
+    right = total[..., None, :] - left
+    gain = sse(total)[..., None] - sse(left) - sse(right)
+    valid = (left[..., 0] > 0) & (right[..., 0] > 0)
+    return jnp.where(valid, gain, -jnp.inf)
+
+
 def variance_gains(sum_hist, sumsq_hist, cnt_hist):
     """Regression analogue: variance reduction per candidate split.
 
     Args: [..., F, B] histograms of sum(y*w), sum(y^2*w), sum(w).
     Returns: [..., F, B-1] gain (invalid -> -inf).
     """
+    hist = jnp.stack([cnt_hist, sum_hist, sumsq_hist], axis=-1)
+    cum = jnp.cumsum(hist, axis=-2)
+    return variance_gains_from_cumsum(cum, cum[..., -1, :])
 
-    def sse(s, ss, c):
-        return ss - s * s / jnp.maximum(c, 1e-38)
 
-    tot_s = sum_hist.sum(-1)
-    tot_ss = sumsq_hist.sum(-1)
-    tot_c = cnt_hist.sum(-1)
-    l_s = jnp.cumsum(sum_hist, -1)[..., :-1]
-    l_ss = jnp.cumsum(sumsq_hist, -1)[..., :-1]
-    l_c = jnp.cumsum(cnt_hist, -1)[..., :-1]
-    r_s = tot_s[..., None] - l_s
-    r_ss = tot_ss[..., None] - l_ss
-    r_c = tot_c[..., None] - l_c
-    gain = sse(tot_s, tot_ss, tot_c)[..., None] - sse(l_s, l_ss, l_c) - sse(r_s, r_ss, r_c)
-    valid = (l_c > 0) & (r_c > 0)
-    return jnp.where(valid, gain, -jnp.inf)
+def _select_winners(gr: jnp.ndarray, cum: jnp.ndarray, total: jnp.ndarray) -> SplitScores:
+    """T_NS argmax + child-count gather, re-using the scoring cumsum.
+
+    The child counts come for free from the same prefix sums the gain
+    ratios were computed from (the paper's "intermediate results
+    submitted to subsequent tasks") — no second pass over the bin axis.
+    """
+    k, S, F, B, C = cum.shape
+    flat = gr.reshape(k, S, F * (B - 1))
+    best = jnp.argmax(flat, axis=-1)                # [k, S]
+    best_gr = jnp.take_along_axis(flat, best[..., None], axis=-1)[..., 0]
+    best_f = (best // (B - 1)).astype(jnp.int32)
+    best_thr = (best % (B - 1)).astype(jnp.int32)
+
+    f_idx = best_f[..., None, None, None]           # [k, S, 1, 1, 1]
+    cum_f = jnp.take_along_axis(cum, jnp.broadcast_to(f_idx, (k, S, 1, B, C)), axis=2)[:, :, 0]
+    left_counts = jnp.take_along_axis(
+        cum_f, jnp.broadcast_to(best_thr[..., None, None], (k, S, 1, C)), axis=2
+    )[:, :, 0]
+    total_f = jnp.take_along_axis(
+        total, jnp.broadcast_to(best_f[..., None, None], (k, S, 1, C)), axis=2
+    )[:, :, 0]
+    right_counts = total_f - left_counts
+    return SplitScores(best_gr, best_f, best_thr, left_counts, right_counts)
 
 
 def best_splits(hist: jnp.ndarray, feature_mask: jnp.ndarray | None = None) -> SplitScores:
@@ -116,31 +175,31 @@ def best_splits(hist: jnp.ndarray, feature_mask: jnp.ndarray | None = None) -> S
         never win the argmax.
     Returns: SplitScores with [k, S] leaders + child class counts.
     """
-    k, S, F, B, C = hist.shape
-    gr = split_gain_ratios(hist)                    # [k, S, F, B-1]
+    cum = jnp.cumsum(hist, axis=-2)                 # the ONE bin scan
+    total = cum[..., -1, :]
+    gr = split_gain_ratios_from_cumsum(cum, total)  # [k, S, F, B-1]
     if feature_mask is not None:
         gr = jnp.where(feature_mask[:, None, :, None], gr, -jnp.inf)
+    return _select_winners(gr, cum, total)
 
-    flat = gr.reshape(k, S, F * (B - 1))
-    best = jnp.argmax(flat, axis=-1)                # [k, S]
-    best_gr = jnp.take_along_axis(flat, best[..., None], axis=-1)[..., 0]
-    best_f = (best // (B - 1)).astype(jnp.int32)
-    best_thr = (best % (B - 1)).astype(jnp.int32)
 
-    # Child class counts of the winning split (free from the histogram —
-    # the paper's "intermediate results submitted to subsequent tasks").
-    cum = jnp.cumsum(hist, axis=-2)                 # [k, S, F, B, C]
-    f_idx = best_f[..., None, None, None]           # [k, S, 1, 1, 1]
-    cum_f = jnp.take_along_axis(cum, jnp.broadcast_to(f_idx, (k, S, 1, B, C)), axis=2)[:, :, 0]
-    left_counts = jnp.take_along_axis(
-        cum_f, jnp.broadcast_to(best_thr[..., None, None], (k, S, 1, C)), axis=2
-    )[:, :, 0]
-    total = hist.sum(axis=-2)                       # [k, S, F, C]
-    total_f = jnp.take_along_axis(
-        total, jnp.broadcast_to(best_f[..., None, None], (k, S, 1, C)), axis=2
-    )[:, :, 0]
-    right_counts = total_f - left_counts
-    return SplitScores(best_gr, best_f, best_thr, left_counts, right_counts)
+def node_counts(scores: SplitScores, *, regression: bool = False) -> jnp.ndarray:
+    """Node sample count [k, S] recovered from the winner's child counts."""
+    if regression:
+        return scores.left_counts[..., 0] + scores.right_counts[..., 0]
+    return scores.left_counts.sum(-1) + scores.right_counts.sum(-1)
+
+
+SPLIT_BACKENDS = ("auto", "pallas", "xla")
+
+
+def resolve_split_backend(backend: str) -> str:
+    """'auto' -> 'pallas' on TPU, 'xla' elsewhere."""
+    if backend not in SPLIT_BACKENDS:
+        raise ValueError(f"split_backend={backend!r} not in {SPLIT_BACKENDS}")
+    if backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    return backend
 
 
 def level_scores(
@@ -148,40 +207,36 @@ def level_scores(
     feature_mask: jnp.ndarray | None,
     *,
     regression: bool = False,
+    backend: str = "xla",
+    interpret: bool | None = None,
 ) -> tuple[SplitScores, jnp.ndarray]:
     """T_NS stage-1: per-(tree, slot) winning split + node sample count.
 
     Args:
       hist: [k, S, F, B, C] (C = n_classes, or 3 regression channels).
+      backend: split-scoring backend ("auto" | "pallas" | "xla"); the
+        pallas backend consumes ``hist`` per feature block in VMEM and
+        only the O(k*S) winners leave the kernel.
+      interpret: pallas backend only; ``None`` = interpret off-TPU.
     Returns: (SplitScores, n_node [k, S]).
     """
-    k, S, F, B, C = hist.shape
-    if not regression:
-        scores = best_splits(hist, feature_mask)
-        n_node = scores.left_counts.sum(-1) + scores.right_counts.sum(-1)
-        return scores, n_node
+    backend = resolve_split_backend(backend)
+    if backend == "pallas":
+        from ..kernels.split_scan.kernel import split_scan_scores
 
-    gains = variance_gains(hist[..., 1], hist[..., 2], hist[..., 0])
-    if feature_mask is not None:
-        gains = jnp.where(feature_mask[:, None, :, None], gains, -jnp.inf)
-    flat = gains.reshape(k, S, -1)
-    bi = jnp.argmax(flat, -1)
-    best_gain = jnp.take_along_axis(flat, bi[..., None], -1)[..., 0]
-    best_f = (bi // (B - 1)).astype(jnp.int32)
-    best_thr = (bi % (B - 1)).astype(jnp.int32)
-    cum = jnp.cumsum(hist, axis=-2)
-    cum_f = jnp.take_along_axis(
-        cum, jnp.broadcast_to(best_f[..., None, None, None], (k, S, 1, B, C)), 2
-    )[:, :, 0]
-    left_counts = jnp.take_along_axis(
-        cum_f, jnp.broadcast_to(best_thr[..., None, None], (k, S, 1, C)), 2
-    )[:, :, 0]
-    total_f = jnp.take_along_axis(
-        hist.sum(-2), jnp.broadcast_to(best_f[..., None, None], (k, S, 1, C)), 2
-    )[:, :, 0]
-    right_counts = total_f - left_counts
-    scores = SplitScores(best_gain, best_f, best_thr, left_counts, right_counts)
-    return scores, total_f[..., 0]
+        scores = split_scan_scores(
+            hist, feature_mask, regression=regression, interpret=interpret
+        )
+    elif regression:
+        cum = jnp.cumsum(hist, axis=-2)
+        total = cum[..., -1, :]
+        gains = variance_gains_from_cumsum(cum, total)
+        if feature_mask is not None:
+            gains = jnp.where(feature_mask[:, None, :, None], gains, -jnp.inf)
+        scores = _select_winners(gains, cum, total)
+    else:
+        scores = best_splits(hist, feature_mask)
+    return scores, node_counts(scores, regression=regression)
 
 
 def multiway_gain_ratio(hist: jnp.ndarray) -> jnp.ndarray:

@@ -28,6 +28,11 @@ dominant memory traffic (§Perf log, PERF.md).
 The distributed path (core/distributed.py) calls the same function on
 each device's (sample-shard x feature-shard) block and psums over the
 sample axis.
+
+The fused T_GR->T_NS path (core/forest.fused_level_scores and the
+blocked dimension-reduction sweep in core/dimred.py) calls
+``level_histograms`` on one ``hist_feature_slab``-wide column slice at a
+time, so the full ``[tc, S, F, B, C]`` tensor never reaches HBM.
 """
 from __future__ import annotations
 
@@ -48,6 +53,23 @@ def resolve_backend(backend: str) -> str:
     if backend == "auto":
         return "pallas" if jax.default_backend() == "tpu" else "segment_sum"
     return backend
+
+
+def hist_feature_slab(
+    N: int, F: int, S: int, B: int, C: int, *, packed: bool = False
+) -> int:
+    """Feature-slab width for blocked histogram consumption.
+
+    This is exactly the pallas hist kernel's own ``f_blk`` for the
+    *full-F* problem, so per-slab histograms are bit-identical to
+    column slices of the one-shot call: the kernel sees the same
+    ``(n_blk, f_blk)`` blocks in the same order, just one
+    feature-block-column at a time. (``segment_sum`` is per-feature
+    independent, so it is trivially slab-invariant.)
+    """
+    from ..kernels.gain_ratio.kernel import choose_blocks
+
+    return choose_blocks(N, F, S, B, C, packed=packed)[1]
 
 
 @partial(

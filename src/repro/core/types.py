@@ -70,6 +70,12 @@ class ForestConfig:
     # (kernels/gain_ratio, interpret mode off-TPU), "segment_sum" = XLA
     # scatter vmap, "auto" = pallas on TPU else segment_sum. See PERF.md.
     hist_backend: str = "auto"
+    # T_NS backend: "pallas" = fused split-scan kernel (kernels/split_scan)
+    # — on the single-host path it chains hist-kernel -> score-kernel per
+    # feature slab so the [tc, S, F, B, C] histogram never reaches HBM;
+    # "xla" = vectorized jnp argmax over the full histogram; "auto" =
+    # pallas on TPU else xla. See PERF.md.
+    split_backend: str = "auto"
 
     @property
     def frontier(self) -> int:

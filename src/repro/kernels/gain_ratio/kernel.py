@@ -29,7 +29,11 @@ Arbitrary ``N``/``F`` are supported: inputs are padded up to the block
 grid with parked samples (``slot = -1`` -> zero weight) and dummy
 features (sliced off the output). Block sizes are auto-chosen from a
 VMEM budget as a function of the ``(S*B, C)`` accumulator footprint —
-see ``choose_blocks``.
+see ``choose_blocks``. ``choose_blocks(...)[1]`` doubles as the
+feature-slab width of the fused T_GR->T_NS loop
+(``core/histograms.hist_feature_slab``): slabs that wide see the same
+``(n_blk, f_blk)`` grid in the same order, so per-slab histograms are
+bit-identical to slices of a one-shot call.
 """
 from __future__ import annotations
 
@@ -40,7 +44,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 # Per-step VMEM working-set budget. ~16 MiB/core physical; half keeps
-# headroom for Pallas' double-buffered input pipelining.
+# headroom for Pallas' double-buffered input pipelining. Shared with the
+# split-scan score kernel (kernels/split_scan/kernel.py) so the fused
+# T_GR->T_NS pipeline sizes both stages against the same ceiling.
 _VMEM_BUDGET = 8 * 2 ** 20
 
 

@@ -1,0 +1,4 @@
+# Fused T_NS split scoring: consumes histogram slabs in VMEM, keeps a
+# running-best (gain, feature, threshold, child counts) carry, and only
+# the O(k*S) winners ever reach HBM. kernel.py is the Pallas backend,
+# ref.py the pure-XLA oracle, ops.py the jit'd public wrapper.

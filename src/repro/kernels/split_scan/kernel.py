@@ -1,0 +1,237 @@
+"""Pallas TPU kernel: fused T_NS split scoring (paper §4.2.1, Eq. 2-6).
+
+PR 1 made T_GR (histogram construction) a Pallas kernel but still wrote
+the full ``[tc, S, F, B, C]`` histogram to HBM for ``core/gain.py`` to
+re-read — for training shapes that tensor is orders of magnitude larger
+than the ``O(k*S)`` split descriptors that survive the level. This
+kernel closes the loop: it consumes histogram tiles ``[1, S, f_blk, B,
+C]`` in VMEM, computes the bin-cumsum, Eq. (2)-(6) gain ratios (or the
+``variance_gains`` regression analogue) and the dim-reduction feature
+mask in-register, and folds the T_NS argmax into the grid loop as a
+running ``(best_gr, best_f, best_thr, left/right_counts)`` accumulator.
+Only the per-(tree, slot) winners are ever written back.
+
+Grid: ``(tc, F_blocks)`` with the feature axis innermost (sequential),
+so each tree's [S]-shaped accumulator stays resident in VMEM while
+feature blocks stream through — the same reduction-grid pattern as
+``kernels/gain_ratio``. The carry is *resumable*: callers pass the
+previous best as inputs (seeded into the output at the first feature
+block) plus a global feature offset, which is how
+``core/forest.fused_level_scores`` chains histogram-kernel -> score-
+kernel per feature slab without ever materializing the full histogram,
+and how ``core/distributed.py`` scores each shard's feature slice
+post-combine.
+
+Numerics are shared with the XLA backend (``core/gain.py``'s
+``*_from_cumsum`` scorers) and carry updates are strictly-greater, so
+first-occurrence argmax semantics match exactly. Gain *values* agree to
+float rounding only (XLA fuses the two compiled contexts differently —
+FMA/reassociation). Winners and child counts are bit-identical wherever
+the backends share XLA numerics — interpret mode (the tested path) and
+real training data, where integer DSI weights make every histogram and
+its prefix sums exact — so ``grow_forest`` builds bit-identical forests
+whichever backend scores the splits (tests/test_split_backends.py).
+Caveat: on a real TPU (``interpret=False``) Mosaic may round the
+log/division chain differently from XLA, so two *near-tied* candidate
+splits could in principle flip order vs the xla backend; the forests
+remain valid, but exact cross-backend identity is only asserted where
+it can be tested.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ...core.gain import (
+    SplitScores, split_gain_ratios_from_cumsum, variance_gains_from_cumsum,
+)
+from ..gain_ratio.kernel import _VMEM_BUDGET, _round_up
+
+
+def choose_score_block(
+    S: int, B: int, C: int, F: int, *,
+    f_blk: int | None = None, vmem_budget: int = _VMEM_BUDGET,
+) -> int:
+    """Feature-block width for the score kernel, from the same VMEM
+    budget as ``gain_ratio.choose_blocks``.
+
+    Working set per grid step is ~6 slab-sized f32 arrays (hist tile,
+    bin cumsum, right counts, scores, winner one-hot, scratch):
+    ``6 * f_blk * S*B * C * 4`` bytes must fit the budget.
+    """
+    if f_blk is None:
+        f_blk = 128
+        while f_blk > 8 and 6 * f_blk * S * B * C * 4 > vmem_budget:
+            f_blk //= 2
+    return min(f_blk, _round_up(max(F, 1), 8))
+
+
+def init_carry(tc: int, S: int, C: int) -> tuple:
+    """Neutral running-best carry: no winner yet (feature = -1).
+
+    The kernel force-accepts the first block's argmax while
+    ``feature < 0``, which reproduces the XLA oracle's all-invalid
+    semantics (gain -inf -> feature 0, threshold 0, counts of that
+    split) without a special case.
+    """
+    return (
+        jnp.full((tc, S), -jnp.inf, jnp.float32),   # best gain ratio
+        jnp.full((tc, S), -1, jnp.int32),           # best feature (global id)
+        jnp.zeros((tc, S), jnp.int32),              # best threshold
+        jnp.zeros((tc, S, C), jnp.float32),         # left child counts
+        jnp.zeros((tc, S, C), jnp.float32),         # right child counts
+    )
+
+
+def _split_scan_kernel(
+    hist_ref, mask_ref, fbase_ref,
+    gr0_ref, f0_ref, thr0_ref, l0_ref, r0_ref,
+    gr_ref, f_ref, thr_ref, l_ref, r_ref,
+    *, f_blk: int, regression: bool,
+):
+    """One (tree, feature-block) grid step: score the slab, fold argmax."""
+    fj = pl.program_id(1)
+
+    @pl.when(fj == 0)
+    def _seed_from_carry():
+        gr_ref[...] = gr0_ref[...]
+        f_ref[...] = f0_ref[...]
+        thr_ref[...] = thr0_ref[...]
+        l_ref[...] = l0_ref[...]
+        r_ref[...] = r0_ref[...]
+
+    hist = hist_ref[0]                                # [S, f_blk, B, C]
+    S, Fb, B, C = hist.shape
+    cum = jnp.cumsum(hist, axis=-2)                   # the ONE bin scan
+    total = cum[:, :, -1, :]                          # [S, f_blk, C]
+    if regression:
+        sc = variance_gains_from_cumsum(cum, total)   # [S, f_blk, B-1]
+    else:
+        sc = split_gain_ratios_from_cumsum(cum, total)
+    admit = mask_ref[0, :] > 0                        # [f_blk]
+    sc = jnp.where(admit[None, :, None], sc, -jnp.inf)
+
+    # Block argmax with first-occurrence tie-break (== jnp.argmax).
+    flat = sc.reshape(S, Fb * (B - 1))
+    m = jnp.max(flat, axis=-1)                        # [S]
+    col = jax.lax.broadcasted_iota(jnp.int32, flat.shape, 1)
+    idx = jnp.min(jnp.where(flat == m[:, None], col, Fb * (B - 1)), axis=-1)
+
+    # Winner child counts, gathered from the cumsum via a one-hot
+    # multiply-reduce (TPUs have no fast gather; exact — all other
+    # summands are literal zeros).
+    one = (col == idx[:, None]).astype(hist.dtype).reshape(S, Fb, B - 1)
+    left = cum[:, :, :-1, :]                          # [S, f_blk, B-1, C]
+    lcnt = jnp.sum(one[..., None] * left, axis=(1, 2))                      # [S, C]
+    rcnt = jnp.sum(one[..., None] * (total[:, :, None, :] - left), axis=(1, 2))
+
+    fl = (idx // (B - 1)).astype(jnp.int32)
+    thr = (idx % (B - 1)).astype(jnp.int32)
+    f_glob = fbase_ref[0] + fj * f_blk + fl           # [S] global feature id
+
+    # Strictly-greater keeps the earliest (lowest feature-id) winner on
+    # ties; `feature < 0` force-accepts the very first block so the
+    # neutral carry never survives.
+    cur_gr = gr_ref[0]
+    better = (m > cur_gr) | (f_ref[0] < 0)
+    gr_ref[0] = jnp.where(better, m, cur_gr)
+    thr_ref[0] = jnp.where(better, thr, thr_ref[0])
+    l_ref[0] = jnp.where(better[:, None], lcnt, l_ref[0])
+    r_ref[0] = jnp.where(better[:, None], rcnt, r_ref[0])
+    f_ref[0] = jnp.where(better, f_glob, f_ref[0])
+
+
+def split_scan_block(
+    hist: jnp.ndarray,           # [tc, S, F, B, C] histogram slab
+    mask: jnp.ndarray,           # [tc, F] bool/int feature mask
+    carry: tuple | None,         # running best (init_carry or a prior result)
+    f_base,                      # global feature id of hist[..., 0, :, :] (traced ok)
+    *,
+    regression: bool = False,
+    f_blk: int | None = None,
+    interpret: bool = False,
+) -> tuple:
+    """Fold one histogram slab into the running-best carry.
+
+    Returns the updated carry ``(gain [tc,S] f32, feature [tc,S] i32,
+    threshold [tc,S] i32, left_counts [tc,S,C] f32, right_counts)``.
+    ``feature`` ids are global (``f_base`` + position in ``hist``).
+    """
+    tc, S, F, B, C = hist.shape
+    f_blk = choose_score_block(S, B, C, F, f_blk=f_blk)
+    Fp = _round_up(F, f_blk)
+    if Fp != F:
+        # Padded features are masked out; they can never win (the
+        # force-accept lands on flat position 0, a real feature).
+        hist = jnp.pad(hist, ((0, 0), (0, 0), (0, Fp - F), (0, 0), (0, 0)))
+        mask = jnp.pad(mask, ((0, 0), (0, Fp - F)))
+    if carry is None:
+        carry = init_carry(tc, S, C)
+
+    grid = (tc, Fp // f_blk)
+    carry_specs = [
+        pl.BlockSpec((1, S), lambda t, f: (t, 0)),
+        pl.BlockSpec((1, S), lambda t, f: (t, 0)),
+        pl.BlockSpec((1, S), lambda t, f: (t, 0)),
+        pl.BlockSpec((1, S, C), lambda t, f: (t, 0, 0)),
+        pl.BlockSpec((1, S, C), lambda t, f: (t, 0, 0)),
+    ]
+    outs = pl.pallas_call(
+        functools.partial(
+            _split_scan_kernel, f_blk=f_blk, regression=regression
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, S, f_blk, B, C), lambda t, f: (t, 0, f, 0, 0)),
+            pl.BlockSpec((1, f_blk), lambda t, f: (t, f)),
+            pl.BlockSpec((1,), lambda t, f: (0,)),
+            *carry_specs,
+        ],
+        out_specs=carry_specs,
+        out_shape=[
+            jax.ShapeDtypeStruct((tc, S), jnp.float32),
+            jax.ShapeDtypeStruct((tc, S), jnp.int32),
+            jax.ShapeDtypeStruct((tc, S), jnp.int32),
+            jax.ShapeDtypeStruct((tc, S, C), jnp.float32),
+            jax.ShapeDtypeStruct((tc, S, C), jnp.float32),
+        ],
+        interpret=interpret,
+    )(
+        hist.astype(jnp.float32),
+        mask.astype(jnp.int32),
+        jnp.full((1,), f_base, jnp.int32),
+        *carry,
+    )
+    return tuple(outs)
+
+
+def split_scan_scores(
+    hist: jnp.ndarray,
+    mask: jnp.ndarray | None,
+    *,
+    regression: bool = False,
+    f_blk: int | None = None,
+    interpret: bool | None = None,
+) -> SplitScores:
+    """Score a full [tc, S, F, B, C] histogram in one pallas_call.
+
+    This is the ``split_backend="pallas"`` entry point of
+    ``core/gain.level_scores`` — used when a combined histogram already
+    exists (e.g. post-psum on each shard's feature slice). The
+    fully-fused no-HBM-histogram path is ``core/forest.
+    fused_level_scores``, which chains ``split_scan_block`` per slab.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    tc, S, F, B, C = hist.shape
+    if mask is None:
+        mask = jnp.ones((tc, F), jnp.bool_)
+    return SplitScores(
+        *split_scan_block(
+            hist, mask, None, 0,
+            regression=regression, f_blk=f_blk, interpret=interpret,
+        )
+    )

@@ -7,7 +7,7 @@ import pytest
 
 from repro.core.gain import (
     best_splits, entropy_from_counts, multiway_gain_ratio,
-    split_gain_ratios, variable_importance,
+    split_gain_ratios, variable_importance, variance_gains,
 )
 
 
@@ -68,6 +68,39 @@ def test_best_splits_child_counts_consistent():
                 np.asarray(s.left_counts + s.right_counts)[t, sl],
                 np.asarray(total)[t, sl, f], rtol=1e-5,
             )
+
+
+def test_variance_gains_matches_bruteforce():
+    """Regression split gain (SSE reduction) vs a per-split numpy loop."""
+    rng = np.random.default_rng(2)
+    F, B = 3, 6
+    cnt = rng.integers(1, 4, (F, B)).astype(np.float64)
+    s = rng.standard_normal((F, B)) * cnt
+    ss = np.abs(rng.standard_normal((F, B))) * cnt + s * s / cnt
+
+    got = np.asarray(variance_gains(
+        jnp.asarray(s, jnp.float32), jnp.asarray(ss, jnp.float32),
+        jnp.asarray(cnt, jnp.float32),
+    ))
+
+    def sse(s_, ss_, c_):
+        return ss_ - s_ * s_ / c_
+
+    for f in range(F):
+        tot = sse(s[f].sum(), ss[f].sum(), cnt[f].sum())
+        for b in range(B - 1):
+            l = (s[f, : b + 1].sum(), ss[f, : b + 1].sum(), cnt[f, : b + 1].sum())
+            r = (s[f, b + 1 :].sum(), ss[f, b + 1 :].sum(), cnt[f, b + 1 :].sum())
+            want = tot - sse(*l) - sse(*r)
+            assert got[f, b] == pytest.approx(want, rel=1e-3, abs=1e-3)
+
+
+def test_variance_gains_invalid_empty_side():
+    cnt = np.zeros((1, 4), np.float32)
+    cnt[0, 0] = 5.0                       # all mass in bin 0
+    z = jnp.zeros((1, 4), jnp.float32)
+    gains = variance_gains(z, z, jnp.asarray(cnt))
+    assert np.all(np.isneginf(np.asarray(gains)))
 
 
 def test_multiway_gain_ratio_informative_feature_wins():
