@@ -5,10 +5,12 @@ NOT TPU performance — reported for completeness; correctness sweeps live
 in tests/test_kernels.py. The ``level_hist_*`` rows time the T_GR
 backend on the histogram shapes training actually builds (multi-tree,
 both backends, packed and unpacked); ``level_scores_*`` times the T_NS
-split-scoring backends on the same shapes, and ``hist_score_fused_*``
-the end-to-end T_GR->T_NS chunk (fused no-HBM-histogram path vs the
-two-tensor xla path) — the series BENCH_kernels.json tracks across PRs
-(see PERF.md).
+split-scoring backends on the same shapes, ``hist_score_fused_*`` the
+end-to-end T_GR->T_NS chunk (fused no-HBM-histogram path vs the
+two-tensor xla path), ``predict_*`` the Eq. 9/10 weighted-voting
+backends on a trained forest, and ``serve_throughput`` the bucketed
+serving layer end to end — the series BENCH_kernels.json tracks across
+PRs (see PERF.md).
 """
 import dataclasses
 import time
@@ -112,9 +114,54 @@ def run_level_scores():
     return rows
 
 
+def run_predict():
+    """Prediction backends + serving throughput on a trained forest.
+
+    ``predict_xla`` routes the full [k, N, C] per-tree tensor through
+    HBM before voting; ``predict_pallas`` is the fused traversal+voting
+    kernel (interpret-mode emulation off-TPU). ``serve_throughput``
+    times PRFService.predict — binning, bucketing, padding and the
+    jit'd bucket forward pass — on a full bucket of raw rows.
+    """
+    from repro.core.api import train_prf
+    from repro.core.binning import apply_bins
+    from repro.core.voting import predict
+    from repro.data.tabular import make_classification
+    from repro.serving import PRFService
+
+    rows = []
+    k, depth = 16, 6
+    x, y = make_classification(n_samples=N, n_features=F, n_classes=C, seed=3)
+    cfg = ForestConfig(
+        n_trees=k, max_depth=depth, n_bins=B, n_classes=C, feature_mode="all",
+    )
+    model = train_prf(x, y, cfg, seed=0)
+    xb = apply_bins(jnp.asarray(x), jnp.asarray(model.bin_edges))
+    shape = f"k={k},depth={depth},N={N},F={F},B={B},C={C}"
+    for be in ("xla", "pallas"):
+        fn = jax.jit(lambda a, _be=be: predict(model.forest, a, backend=_be))
+        rows.append({
+            "bench": f"predict_{be}",
+            "us_per_call": _time(fn, xb),
+            "derived": shape,
+            "backend": be,
+        })
+
+    svc = PRFService(model, max_batch=1024, min_bucket=8)
+    batch = x[:1024]
+    us = _time(lambda: svc.predict(batch))
+    rows.append({
+        "bench": "serve_throughput",
+        "us_per_call": us,
+        "derived": f"batch=1024,{shape}",
+        "rows_per_s": 1024 / (us / 1e6),
+    })
+    return rows
+
+
 def run():
     rng = np.random.default_rng(0)
-    rows = run_level_hist() + run_level_scores()
+    rows = run_level_hist() + run_level_scores() + run_predict()
 
     N, F, S, B, C = 2048, 128, 4, 16, 4
     xb = jnp.asarray(rng.integers(0, B, (N, F)).astype(np.int32))

@@ -20,12 +20,23 @@ from .dimred import dimension_reduction, random_feature_mask
 from .dsi import bootstrap_counts
 from .forest import grow_forest
 from .types import Forest, ForestConfig
-from .voting import oob_accuracy, oob_r2, predict, predict_regression
+from .voting import (
+    oob_accuracy, oob_r2, predict, predict_regression, predict_scores,
+)
 
 
 @dataclasses.dataclass
 class PRFModel:
-    """Trained model + the binning transform needed at inference."""
+    """Trained model + the binning transform needed at inference.
+
+    Prediction honors ``forest.config.predict_backend`` ("auto" |
+    "pallas" | "xla"): the pallas backend runs the fused
+    traversal+voting kernel (``kernels/tree_traverse``) that never
+    materializes the ``[k, N, C]`` per-tree tensor; labels are
+    identical across backends. For serving (batch bucketing, request
+    aggregation, tree-sharded multi-device voting) wrap the model in
+    ``repro.serving.PRFService``.
+    """
 
     forest: Forest
     bin_edges: np.ndarray
@@ -36,8 +47,26 @@ class PRFModel:
             return np.asarray(predict_regression(self.forest, xb))
         return np.asarray(predict(self.forest, xb))
 
+    def predict_scores(self, x: np.ndarray) -> np.ndarray:
+        """Weighted-vote class scores [N, C] (classification only)."""
+        if self.forest.config.regression:
+            raise ValueError(
+                "predict_scores is classification-only; use predict() for "
+                "regression models"
+            )
+        xb = apply_bins(jnp.asarray(x), jnp.asarray(self.bin_edges))
+        return np.asarray(predict_scores(self.forest, xb))
+
     def accuracy(self, x: np.ndarray, y: np.ndarray) -> float:
         return float(np.mean(self.predict(x) == np.asarray(y)))
+
+    def with_predict_backend(self, backend: str) -> "PRFModel":
+        """Same model, different prediction backend (config is static)."""
+        cfg = dataclasses.replace(self.forest.config, predict_backend=backend)
+        return PRFModel(
+            forest=dataclasses.replace(self.forest, config=cfg),
+            bin_edges=self.bin_edges,
+        )
 
 
 def train_prf(

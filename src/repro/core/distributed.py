@@ -55,7 +55,8 @@ def _shard_map(f, *, mesh, in_specs, out_specs):
 
 from .dsi import bootstrap_counts
 from .forest import (
-    _gather_feature_bins, _rank_splits, chunked_level_scores, init_forest,
+    _gather_feature_bins, _rank_splits, _safe_mean, chunked_level_scores,
+    init_forest,
 )
 from .gain import SplitScores, multiway_gain_ratio
 from .histograms import class_channels, level_histograms, regression_channels
@@ -128,9 +129,7 @@ def _grow_sharded(
     if config.regression:
         forest = dataclasses.replace(
             forest,
-            value=forest.value.at[:, 0].set(
-                root_counts[:, 1] / jnp.maximum(root_counts[:, 0], 1e-38)
-            ),
+            value=forest.value.at[:, 0].set(_safe_mean(root_counts)),
         )
 
     slot_node = jnp.full((k, S), -1, jnp.int32).at[:, 0].set(0)
@@ -207,8 +206,8 @@ def _grow_sharded(
         class_counts = forest.class_counts.at[t_idx, lid].set(scores.left_counts)
         class_counts = class_counts.at[t_idx, rid].set(scores.right_counts)
         if config.regression:
-            lval = scores.left_counts[..., 1] / jnp.maximum(scores.left_counts[..., 0], 1e-38)
-            rval = scores.right_counts[..., 1] / jnp.maximum(scores.right_counts[..., 0], 1e-38)
+            lval = _safe_mean(scores.left_counts)
+            rval = _safe_mean(scores.right_counts)
             value = forest.value.at[t_idx, lid].set(lval).at[t_idx, rid].set(rval)
         else:
             value = forest.value

@@ -45,6 +45,25 @@ def init_forest(config: ForestConfig) -> Forest:
     )
 
 
+def _safe_mean(counts: jnp.ndarray) -> jnp.ndarray:
+    """Weighted mean ``sum / count`` of [..., C>=2] regression channels,
+    0 when the count is 0.
+
+    ``sum / maximum(count, 1e-38)`` is NOT safe here: 1e-38 is a
+    subnormal float32, which XLA flushes to zero on CPU/TPU, so
+    zero-count slots (every non-split frontier slot writes the pad
+    node) silently became 0/0 = NaN. Harmless to the gather-based
+    predict path (the pad slot is unreachable), but the fused traversal
+    kernel reads every pool row through a one-hot matmul and 0 * NaN
+    poisons the scores.
+    """
+    return jnp.where(
+        counts[..., 0] > 0,
+        counts[..., 1] / jnp.maximum(counts[..., 0], 1e-38),
+        0.0,
+    )
+
+
 def _gather_feature_bins(xb: jnp.ndarray, f: jnp.ndarray) -> jnp.ndarray:
     """bins[t, i] = xb[i, f[t, i]] as ONE flattened gather.
 
@@ -224,9 +243,7 @@ def _grow_forest_impl(x_binned, y, weights, config, feature_mask):
     if config.regression:
         forest = dataclasses.replace(
             forest,
-            value=forest.value.at[:, 0].set(
-                root_counts[:, 1] / jnp.maximum(root_counts[:, 0], 1e-38)
-            ),
+            value=forest.value.at[:, 0].set(_safe_mean(root_counts)),
         )
 
     slot_node = jnp.full((k, S), -1, jnp.int32).at[:, 0].set(0)
@@ -264,8 +281,8 @@ def _grow_forest_impl(x_binned, y, weights, config, feature_mask):
         class_counts = forest.class_counts.at[t_idx, lid].set(scores.left_counts)
         class_counts = class_counts.at[t_idx, rid].set(scores.right_counts)
         if config.regression:
-            lval = scores.left_counts[..., 1] / jnp.maximum(scores.left_counts[..., 0], 1e-38)
-            rval = scores.right_counts[..., 1] / jnp.maximum(scores.right_counts[..., 0], 1e-38)
+            lval = _safe_mean(scores.left_counts)
+            rval = _safe_mean(scores.right_counts)
             value = forest.value.at[t_idx, lid].set(lval).at[t_idx, rid].set(rval)
         else:
             value = forest.value
@@ -342,3 +359,46 @@ def predict_value_trees(forest: Forest, x_binned: jnp.ndarray) -> jnp.ndarray:
     """Per-tree regression outputs h_i(x). Returns [k, N]."""
     leaves = route_to_leaves(forest, x_binned)
     return jnp.take_along_axis(forest.value, leaves, axis=1)
+
+
+@jax.jit
+def fused_vote_scores(
+    forest: Forest,
+    x_binned: jnp.ndarray,      # [N, F] uint8
+    payload: jnp.ndarray,       # [k, P, C] weighted per-node vote vectors
+) -> jnp.ndarray:
+    """Weighted-vote scores via the fused traversal kernel. Returns [N, C].
+
+    The predict-side analogue of ``fused_level_scores``: trees are
+    processed in ``tree_chunk`` groups, each chunk's ``pallas_call``
+    walking the depth loop in VMEM and folding its votes into the
+    ``[N, C]`` score carry threaded through the chunk loop — the
+    ``[k, N, C]`` per-tree tensor of the xla path
+    (``predict_proba_trees`` -> ``weighted_vote``) never exists
+    (jaxpr-verified by tests/test_predict_backends.py). Chunking is
+    exact (each tree contributes an exact payload row), so any chunk
+    size — including a non-divisible final remainder — gives the same
+    scores.
+    """
+    from ..kernels.tree_traverse.kernel import default_interpret, traverse_block
+
+    k = forest.feature.shape[0]
+    config = forest.config
+    tc = config.tree_chunk if config.tree_chunk > 0 else k
+    tc = min(tc, k)
+    interpret = default_interpret()
+
+    carry = None
+    for c0 in range(0, k, tc):
+        c1 = min(c0 + tc, k)
+        carry = traverse_block(
+            x_binned,
+            forest.feature[c0:c1],
+            forest.threshold[c0:c1],
+            forest.left_child[c0:c1],
+            payload[c0:c1],
+            carry,
+            depth=config.max_depth,
+            interpret=interpret,
+        )
+    return carry

@@ -76,6 +76,14 @@ class ForestConfig:
     # "xla" = vectorized jnp argmax over the full histogram; "auto" =
     # pallas on TPU else xla. See PERF.md.
     split_backend: str = "auto"
+    # Prediction backend: "pallas" = fused traversal+voting kernel
+    # (kernels/tree_traverse) — the depth walk runs in VMEM and the
+    # Eq. 9/10 weighted vote accumulates across the tree grid axis, so
+    # the [k, N, C] per-tree probability tensor never exists; "xla" =
+    # route_to_leaves + weighted_vote over the full tensor; "auto" =
+    # pallas on TPU else xla. Honored by voting.predict /
+    # predict_regression, PRFModel.predict and serving/. See PERF.md.
+    predict_backend: str = "auto"
 
     @property
     def frontier(self) -> int:

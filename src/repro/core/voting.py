@@ -4,16 +4,43 @@ After training, each tree h_i is evaluated on its own Out-Of-Bag set
 OOB_i; the classification accuracy CA_i (Eq. 8) becomes the tree's voting
 weight w_i. Prediction then takes the weighted majority (Eq. 10) or the
 weighted regression average (Eq. 9).
+
+Prediction has two backends, selected by ``ForestConfig.predict_backend``
+and dispatched by ``predict`` / ``predict_regression`` / the score-level
+``predict_scores``:
+
+* ``"xla"``    — ``route_to_leaves`` + ``weighted_vote`` over the full
+  ``[k, N, C]`` per-tree probability tensor (portable oracle);
+* ``"pallas"`` — the fused traversal+voting kernel
+  (``kernels/tree_traverse``): the depth walk runs in VMEM and the
+  weighted vote accumulates across the tree grid axis, so only the
+  ``[N, C]`` scores ever exist;
+* ``"auto"``   — ``pallas`` on TPU, else ``xla``.
+
+Both backends vote with the same per-leaf payloads (``leaf_vote_payload``
+/ ``leaf_value_payload``: tree weight folded into the per-node vote
+vector), so predicted labels are identical across backends.
 """
 from __future__ import annotations
-
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 
-from .forest import predict_proba_trees, predict_value_trees
+from .forest import fused_vote_scores, predict_proba_trees, predict_value_trees
 from .types import Forest
+
+PREDICT_BACKENDS = ("auto", "pallas", "xla")
+
+
+def resolve_predict_backend(backend: str) -> str:
+    """'auto' -> 'pallas' on TPU, 'xla' elsewhere."""
+    if backend not in PREDICT_BACKENDS:
+        raise ValueError(
+            f"predict_backend={backend!r} not in {PREDICT_BACKENDS}"
+        )
+    if backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    return backend
 
 
 def oob_accuracy(
@@ -23,7 +50,10 @@ def oob_accuracy(
 
     Args:
       weights: [k, N] in-bag multiplicities (0 => sample is OOB for tree).
-    Returns: [k] float32 accuracies (0.5 prior when OOB set is empty).
+    Returns: [k] float32 accuracies. A tree whose OOB set is empty (every
+    sample in-bag — possible under the DSI bootstrap) has no evidence
+    either way and gets the **neutral prior 0.5**, never a degenerate
+    0/0.
     """
     probs = predict_proba_trees(forest, x_binned)          # [k, N, C]
     pred = jnp.argmax(probs, axis=-1)                      # [k, N]
@@ -34,14 +64,24 @@ def oob_accuracy(
 
 
 def oob_r2(forest, x_binned, y, weights):
-    """Regression analogue of Eq. (8): per-tree OOB R^2 clipped to [0, 1]."""
+    """Regression analogue of Eq. (8): per-tree OOB R^2 clipped to [0, 1].
+
+    Degenerate OOB sets get the same **neutral prior 0.5** as
+    ``oob_accuracy`` — both when the OOB set is empty (previously the
+    0/eps arithmetic silently produced a confident 1.0) and when its
+    target variance is zero (R^2 undefined; the clip used to hide the
+    garbage ratio). Only a tree with real OOB evidence earns a
+    non-neutral weight.
+    """
     vals = predict_value_trees(forest, x_binned)           # [k, N]
     oob = (weights == 0.0).astype(jnp.float32)
-    n = jnp.maximum(oob.sum(1), 1.0)
+    total = oob.sum(1)
+    n = jnp.maximum(total, 1.0)
     err = jnp.sum(oob * (vals - y[None]) ** 2, axis=1) / n
     mean = jnp.sum(oob * y[None], axis=1) / n
     var = jnp.sum(oob * (y[None] - mean[:, None]) ** 2, axis=1) / n
-    return jnp.clip(1.0 - err / jnp.maximum(var, 1e-38), 0.0, 1.0)
+    r2 = jnp.clip(1.0 - err / jnp.maximum(var, 1e-38), 0.0, 1.0)
+    return jnp.where((total > 0) & (var > 0), r2, 0.5)
 
 
 def weighted_vote(
@@ -78,19 +118,138 @@ def weighted_regression(
     return jnp.sum(w * values, axis=0) / jnp.maximum(tree_weight.sum(), 1e-38)
 
 
-def predict(forest: Forest, x_binned: jnp.ndarray) -> jnp.ndarray:
-    """Full PRF prediction (classification): weighted majority class [N]."""
+# ---------------------------------------------------------------------------
+# Leaf payloads — the fused backend's vote vectors (weight folded in)
+# ---------------------------------------------------------------------------
+
+
+def leaf_vote_payload(
+    forest: Forest, tree_weight: jnp.ndarray, *, soft: bool = False
+) -> jnp.ndarray:
+    """Per-(tree, node) classification vote vectors, weight folded in.
+
+    ``payload[t, p] = w_t * onehot(argmax_c probs[t, p])`` (hard,
+    Eq. 10) or ``w_t * probs[t, p]`` (soft), where ``probs`` are the
+    node's normalized class counts — exactly what the xla path computes
+    per *leaf*, precomputed for every pool node so the fused kernel is
+    a pure traversal + payload gather. [k, P, C] float32.
+    """
+    counts = forest.class_counts
+    total = counts.sum(-1, keepdims=True)
+    # Zero-mass pool slots (the scatter pad, never-allocated bands) vote
+    # zero. The unguarded 0 / maximum(0, 1e-38) is NaN — 1e-38 is a
+    # subnormal f32 that XLA flushes to zero — and the fused kernel's
+    # one-hot matmul reads EVERY pool row (0 * NaN poisons the scores);
+    # the xla path only gathers reachable leaves, where total > 0 makes
+    # the two normalizations identical.
+    probs = jnp.where(total > 0, counts / jnp.maximum(total, 1e-38), 0.0)
+    if soft:
+        vote = probs
+    else:
+        vote = jnp.where(
+            total > 0,
+            jax.nn.one_hot(
+                jnp.argmax(probs, -1), probs.shape[-1], dtype=jnp.float32
+            ),
+            0.0,
+        )
+    return tree_weight[:, None, None] * vote
+
+
+def leaf_value_payload(forest: Forest, tree_weight: jnp.ndarray) -> jnp.ndarray:
+    """Per-(tree, node) weighted regression values, [k, P, 1] float32.
+
+    ``payload[t, p, 0] = w_t * value[t, p]`` — the Eq. (9) numerator;
+    the ``/ sum_i w_i`` normalization happens on the [N] result.
+    Zero-mass pool slots get a zero payload (see ``leaf_vote_payload``:
+    the fused kernel requires finite payloads at every pool row).
+    """
+    mass = forest.class_counts[..., 0]          # regression count channel
+    value = jnp.where(mass > 0, forest.value, 0.0)
+    return (tree_weight[:, None] * value)[..., None]
+
+
+# ---------------------------------------------------------------------------
+# Backend-dispatched prediction
+# ---------------------------------------------------------------------------
+
+
+def _vote_weights(forest: Forest) -> jnp.ndarray:
+    return (
+        forest.tree_weight
+        if forest.config.weighted_voting
+        else jnp.ones_like(forest.tree_weight)
+    )
+
+
+def build_payload(forest: Forest) -> jnp.ndarray:
+    """The forest's vote payload under its own config — the ONE place
+    that maps (regression, soft_voting, weighted_voting) to a payload
+    (used by the serving layer's direct and tree-sharded paths)."""
+    w = _vote_weights(forest)
+    if forest.config.regression:
+        return leaf_value_payload(forest, w)
+    return leaf_vote_payload(forest, w, soft=forest.config.soft_voting)
+
+
+@jax.jit
+def _fused_class_scores(forest: Forest, x_binned: jnp.ndarray) -> jnp.ndarray:
+    """jit'd pallas-backend scores: payload construction is traced into
+    the same compiled program as the traversal, so a predict call does
+    no eager per-request O(k*P*C) work."""
+    payload = leaf_vote_payload(
+        forest, _vote_weights(forest), soft=forest.config.soft_voting
+    )
+    return fused_vote_scores(forest, x_binned, payload)
+
+
+@jax.jit
+def _fused_value_scores(forest: Forest, x_binned: jnp.ndarray) -> jnp.ndarray:
+    payload = leaf_value_payload(forest, _vote_weights(forest))
+    return fused_vote_scores(forest, x_binned, payload)[:, 0]
+
+
+def predict_scores(
+    forest: Forest, x_binned: jnp.ndarray, *, backend: str | None = None
+) -> jnp.ndarray:
+    """Weighted-vote class scores [N, C] (argmax = predicted label).
+
+    Dispatches on ``backend`` (default ``forest.config.predict_backend``):
+    the fused pallas path never materializes the ``[k, N, C]`` per-tree
+    tensor; the xla path is the portable oracle.
+    """
+    backend = resolve_predict_backend(
+        backend if backend is not None else forest.config.predict_backend
+    )
+    if backend == "pallas":
+        return _fused_class_scores(forest, x_binned)
     probs = predict_proba_trees(forest, x_binned)
-    w = forest.tree_weight if forest.config.weighted_voting else jnp.ones_like(
-        forest.tree_weight
+    return weighted_vote(probs, _vote_weights(forest), soft=forest.config.soft_voting)
+
+
+def predict_regression_scores(
+    forest: Forest, x_binned: jnp.ndarray, *, backend: str | None = None
+) -> jnp.ndarray:
+    """Unnormalized Eq. (9) numerator ``sum_i w_i h_i(x)`` as [N]."""
+    backend = resolve_predict_backend(
+        backend if backend is not None else forest.config.predict_backend
     )
-    scores = weighted_vote(probs, w, soft=forest.config.soft_voting)
-    return jnp.argmax(scores, axis=-1)
-
-
-def predict_regression(forest: Forest, x_binned: jnp.ndarray) -> jnp.ndarray:
+    if backend == "pallas":
+        return _fused_value_scores(forest, x_binned)
     vals = predict_value_trees(forest, x_binned)
-    w = forest.tree_weight if forest.config.weighted_voting else jnp.ones_like(
-        forest.tree_weight
-    )
-    return weighted_regression(vals, w)
+    return jnp.sum(_vote_weights(forest)[:, None] * vals, axis=0)
+
+
+def predict(
+    forest: Forest, x_binned: jnp.ndarray, *, backend: str | None = None
+) -> jnp.ndarray:
+    """Full PRF prediction (classification): weighted majority class [N]."""
+    return jnp.argmax(predict_scores(forest, x_binned, backend=backend), axis=-1)
+
+
+def predict_regression(
+    forest: Forest, x_binned: jnp.ndarray, *, backend: str | None = None
+) -> jnp.ndarray:
+    """Full PRF regression prediction: weighted mean of h_i(x), [N]."""
+    num = predict_regression_scores(forest, x_binned, backend=backend)
+    return num / jnp.maximum(_vote_weights(forest).sum(), 1e-38)

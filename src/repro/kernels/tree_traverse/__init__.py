@@ -1,0 +1,8 @@
+# Fused prediction: level-synchronous tree traversal walked entirely in
+# VMEM with the Eq. 9/10 weighted vote accumulated in-register across
+# the tree grid axis — only [N, C] scores leave the kernel, the
+# [k, N, C] per-tree tensor never exists. kernel.py is the Pallas
+# backend, ref.py the pure-XLA oracle, ops.py the jit'd public wrapper.
+from .kernel import choose_traverse_block, traverse_block  # noqa: F401
+from .ops import fused_vote  # noqa: F401
+from .ref import traverse_ref  # noqa: F401

@@ -1,0 +1,190 @@
+"""Pallas TPU kernel: fused tree traversal + weighted voting (paper §3.3).
+
+Training (PR 1-2) is kernel-fused end to end, but prediction still ran
+as an unrolled per-depth gather loop (``core/forest.route_to_leaves``)
+that materialized the full ``[k, N, C]`` per-tree probability tensor in
+HBM before Eq. (9)/(10) voting — for serving shapes that tensor is the
+dominant memory traffic, and none of it survives the vote. This kernel
+closes the prediction loop the same way ``kernels/split_scan`` closed
+T_NS: the level-synchronous depth walk runs entirely in VMEM (the
+forest's ``feature/threshold/left_child`` rows and the per-node vote
+payload resident per tree-block, sample bins streamed in N-blocks), and
+the weighted vote accumulates in-register across the tree grid axis as
+a resumable carry. Only the ``[N, C]`` scores ever leave the kernel —
+the ``[k, N, C]`` tensor never exists (jaxpr-verified by
+``tests/test_predict_backends.py``).
+
+Hard vs soft voting and classification vs regression are unified by the
+**payload** input: per-(tree, node) vote vectors with the tree weight
+``w_i`` already folded in —
+
+    hard (Eq. 10):   payload[t, p] = w_t * onehot(argmax_c counts[t, p])
+    soft:            payload[t, p] = w_t * counts[t, p] / sum_c counts
+    regression (Eq. 9, C=1): payload[t, p, 0] = w_t * value[t, p]
+
+so the kernel is a pure traversal + payload-accumulate; the Eq. (9)
+normalization (``/ sum_i w_i`` or ``/ k``) happens on the tiny [N]
+result outside. Payload construction lives in ``core/voting.py``.
+
+Grid: ``(N_blocks, k)`` with the tree axis innermost (sequential), so
+each sample block's ``[n_blk, C]`` score tile stays resident in VMEM
+while trees stream through — the same reduction-grid pattern as the
+histogram kernel. TPUs have no fast gather, so the per-depth node
+lookups are one-hot select-reduces over the node pool and the final
+leaf-payload read is a one-hot matmul on the MXU (exact: all other
+summands are literal zeros). The carry is resumable: callers seed the
+score tile from a previous call's output (``core/forest.
+fused_vote_scores`` chains tree chunks; ``serving/prf_service.py``
+feeds each shard's partial votes into one ``psum``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..gain_ratio.kernel import _VMEM_BUDGET, _round_up
+
+
+def default_interpret() -> bool:
+    """Interpret-mode emulation off-TPU, compiled on TPU — the ONE
+    resolution rule every traversal caller shares (ops.fused_vote,
+    core/forest.fused_vote_scores)."""
+    return jax.default_backend() != "tpu"
+
+
+def choose_traverse_block(
+    P: int, F: int, C: int, *,
+    n_blk: int | None = None, vmem_budget: int = _VMEM_BUDGET,
+) -> int:
+    """Sample-block height for the traversal kernel, from the shared
+    VMEM budget.
+
+    Working set per grid step is dominated by the [n_blk, P] one-hot
+    node selector and its ~4 gather temporaries, plus the [n_blk, F]
+    bins tile and feature one-hot and the [n_blk, C] score tile:
+    ``n_blk * (6P + 2F + 2C) * 4`` bytes must fit the budget.
+    """
+    if n_blk is None:
+        n_blk = 512
+        while n_blk > 8 and n_blk * (6 * P + 2 * F + 2 * C) * 4 > vmem_budget:
+            n_blk //= 2
+    return n_blk
+
+
+def _traverse_kernel(
+    xb_ref, feat_ref, thr_ref, left_ref, payload_ref, s0_ref, out_ref,
+    *, depth: int,
+):
+    """One (sample-block, tree) grid step: walk the tree, add its vote."""
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _seed_from_carry():
+        out_ref[...] = s0_ref[...]
+
+    xb = xb_ref[...]                                    # [n_blk, Fp] i32
+    feat = feat_ref[0]                                  # [Pp] i32
+    thr = thr_ref[0]
+    left = left_ref[0]
+    n_blk, Fp = xb.shape
+    Pp = feat.shape[0]
+    pcol = jax.lax.broadcasted_iota(jnp.int32, (n_blk, Pp), 1)
+    fcol = jax.lax.broadcasted_iota(jnp.int32, (n_blk, Fp), 1)
+
+    def step(_, node):
+        # Node-pool gathers as one-hot select-reduces (no TPU gather);
+        # exact — every non-selected summand is a literal zero.
+        onehot = pcol == node[:, None]                  # [n_blk, Pp]
+        f = jnp.sum(jnp.where(onehot, feat[None, :], 0), axis=1)
+        th = jnp.sum(jnp.where(onehot, thr[None, :], 0), axis=1)
+        lc = jnp.sum(jnp.where(onehot, left[None, :], 0), axis=1)
+        leaf = f < 0
+        f_safe = jnp.where(leaf, 0, f)
+        b = jnp.sum(jnp.where(fcol == f_safe[:, None], xb, 0), axis=1)
+        nxt = lc + (b > th).astype(jnp.int32)
+        return jnp.where(leaf, node, nxt)
+
+    node = jax.lax.fori_loop(
+        0, depth, step, jnp.zeros((n_blk,), jnp.int32)
+    )
+
+    # Leaf payload read as a one-hot matmul on the MXU (exact).
+    onehot = (pcol == node[:, None]).astype(jnp.float32)
+    votes = jax.lax.dot_general(
+        onehot, payload_ref[0],
+        dimension_numbers=(((1,), (0,)), ((), ())),     # onehot @ payload
+        preferred_element_type=jnp.float32,
+    )                                                   # [n_blk, C]
+    out_ref[...] += votes
+
+
+def traverse_block(
+    x_binned: jnp.ndarray,      # [N, F] int bins
+    feature: jnp.ndarray,       # [tc, P] i32, -1 = leaf
+    threshold: jnp.ndarray,     # [tc, P] i32
+    left_child: jnp.ndarray,    # [tc, P] i32
+    payload: jnp.ndarray,       # [tc, P, C] f32 weighted vote vectors
+    carry: jnp.ndarray | None,  # [N, C] f32 running scores (None = zeros)
+    *,
+    depth: int,
+    n_blk: int | None = None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Fold one tree chunk's weighted votes into the running scores.
+
+    Returns the updated ``[N, C]`` scores. Resumable: pass the result
+    back as ``carry`` for the next chunk (or psum partial scores across
+    tree shards) — chunked accumulation is exact because each tree's
+    contribution is an exact payload row.
+    """
+    N, F = x_binned.shape
+    tc, P = feature.shape
+    C = payload.shape[-1]
+    n_blk = choose_traverse_block(P, F, C, n_blk=n_blk)
+    n_blk = min(n_blk, _round_up(max(N, 1), 8))
+
+    Np, Fp, Pp = _round_up(N, n_blk), _round_up(F, 8), _round_up(P, 8)
+    xb = x_binned.astype(jnp.int32)
+    if Np != N or Fp != F:
+        # Padded samples traverse the tree like real ones but are
+        # sliced off the output; padded feature columns are never
+        # addressed (real feature ids < F).
+        xb = jnp.pad(xb, ((0, Np - N), (0, Fp - F)))
+    if Pp != P:
+        # Padded pool slots are leaves with zero payload; unreachable
+        # anyway (traversal starts at the root, slot 0).
+        feature = jnp.pad(feature, ((0, 0), (0, Pp - P)), constant_values=-1)
+        threshold = jnp.pad(threshold, ((0, 0), (0, Pp - P)))
+        left_child = jnp.pad(left_child, ((0, 0), (0, Pp - P)))
+        payload = jnp.pad(payload, ((0, 0), (0, Pp - P), (0, 0)))
+    if carry is None:
+        carry = jnp.zeros((N, C), jnp.float32)
+    carry = jnp.pad(carry.astype(jnp.float32), ((0, Np - N), (0, 0)))
+
+    grid = (Np // n_blk, tc)
+    out = pl.pallas_call(
+        functools.partial(_traverse_kernel, depth=depth),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n_blk, Fp), lambda n, t: (n, 0)),      # bins
+            pl.BlockSpec((1, Pp), lambda n, t: (t, 0)),          # feature
+            pl.BlockSpec((1, Pp), lambda n, t: (t, 0)),          # threshold
+            pl.BlockSpec((1, Pp), lambda n, t: (t, 0)),          # left_child
+            pl.BlockSpec((1, Pp, C), lambda n, t: (t, 0, 0)),    # payload
+            pl.BlockSpec((n_blk, C), lambda n, t: (n, 0)),       # carry
+        ],
+        out_specs=pl.BlockSpec((n_blk, C), lambda n, t: (n, 0)),
+        out_shape=jax.ShapeDtypeStruct((Np, C), jnp.float32),
+        interpret=interpret,
+    )(
+        xb,
+        feature.astype(jnp.int32),
+        threshold.astype(jnp.int32),
+        left_child.astype(jnp.int32),
+        payload.astype(jnp.float32),
+        carry,
+    )
+    return out[:N]

@@ -1,0 +1,50 @@
+"""Pure-XLA oracle for the fused tree-traversal kernel.
+
+Same contract as ``kernel.traverse_block``: walk every tree for every
+sample for ``depth`` level-synchronous steps, read the leaf's weighted
+vote payload, and fold the per-tree votes into a running ``[N, C]``
+score carry. This is the clarity reference the parity matrix in
+``tests/test_predict_backends.py`` pins the kernel against — it
+deliberately materializes the per-tree ``[k, N, C]`` payload gather
+that the kernel exists to avoid.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def traverse_ref(
+    x_binned: jnp.ndarray,      # [N, F] int bins
+    feature: jnp.ndarray,       # [k, P] i32, -1 = leaf
+    threshold: jnp.ndarray,     # [k, P] i32
+    left_child: jnp.ndarray,    # [k, P] i32
+    payload: jnp.ndarray,       # [k, P, C] f32 weighted vote vectors
+    carry: jnp.ndarray | None = None,   # [N, C] f32
+    *,
+    depth: int,
+) -> jnp.ndarray:
+    """Reference weighted-vote scores. Returns [N, C] float32."""
+    k = feature.shape[0]
+    N = x_binned.shape[0]
+    xb = x_binned.astype(jnp.int32)
+    row = jnp.arange(N)[None, :]
+
+    def step(node, _):
+        f = jnp.take_along_axis(feature, node, 1)            # [k, N]
+        leaf = f < 0
+        f_safe = jnp.where(leaf, 0, f)
+        b = xb[row, f_safe]
+        th = jnp.take_along_axis(threshold, node, 1)
+        lc = jnp.take_along_axis(left_child, node, 1)
+        nxt = lc + (b > th).astype(jnp.int32)
+        return jnp.where(leaf, node, nxt), None
+
+    node0 = jnp.zeros((k, N), jnp.int32)
+    leaves, _ = jax.lax.scan(step, node0, None, length=depth)
+
+    votes = jnp.take_along_axis(
+        payload.astype(jnp.float32), leaves[..., None], axis=1
+    )                                                        # [k, N, C]
+    scores = jnp.sum(votes, axis=0)
+    return scores if carry is None else scores + carry.astype(jnp.float32)

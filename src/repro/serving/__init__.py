@@ -1,1 +1,11 @@
+"""Serving layer.
+
+* ``serve_step``   -- LM prefill/decode step factories.
+* ``prf_service``  -- forest serving: bucketed batching, async
+  micro-batch aggregation, and tree-sharded multi-device voting on top
+  of the fused prediction path (``ForestConfig.predict_backend``).
+"""
+from .prf_service import (  # noqa: F401
+    PRFFuture, PRFService, bucket_size, make_sharded_vote_fn,
+)
 from .serve_step import make_serve_fns  # noqa: F401

@@ -1,0 +1,315 @@
+"""PRF serving layer — bucketed, batched, tree-sharded forest inference.
+
+The ROADMAP north star is serving "heavy traffic from millions of
+users"; arXiv:1804.06755 (PAPERS.md) shows deployed-RF cost is
+dominated by inference, not training. This module turns a trained
+:class:`repro.core.api.PRFModel` into a serving endpoint built on the
+fused traversal+voting path (``ForestConfig.predict_backend``):
+
+* **Power-of-two batch bucketing** — request batches are padded up to
+  the next power-of-two bucket (clamped to ``[min_bucket, max_batch]``)
+  with an explicit validity mask, so the jit cache holds at most
+  ``log2(max_batch / min_bucket) + 1`` compiled shapes no matter what
+  batch sizes arrive. Padded rows are masked out of the scores and
+  sliced off; they can never leak into a real row (per-sample
+  traversal is row-independent, and tests/test_serving.py pins it).
+
+* **Async micro-batch queue** — ``submit()`` enqueues a request and
+  returns a :class:`PRFFuture`; ``drain()`` aggregates everything
+  pending into one bucketed forward pass and resolves the futures in
+  submission order. ``submit`` auto-drains when the queue reaches
+  ``max_batch`` rows, so latency under load is one forward pass.
+
+* **Tree-sharded multi-device voting** — ``make_sharded_vote_fn``
+  shards the forest's node-pool arrays (and vote payloads) over a mesh
+  axis, each shard accumulates the weighted votes of its own trees
+  into an ``[N, C]`` partial score, and a single ``psum`` combines
+  them (Eq. 9/10 is a sum over trees) — mirroring
+  ``core/distributed``'s T_GR histogram combine, with O(N*C) words on
+  the wire instead of O(k*N*C).
+"""
+from __future__ import annotations
+
+import threading
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ..core.api import PRFModel
+from ..core.binning import apply_bins
+from ..core.distributed import _shard_map
+from ..core.types import Forest
+from ..core.voting import (
+    _vote_weights, build_payload, predict_regression, predict_scores,
+    resolve_predict_backend,
+)
+
+
+def bucket_size(n: int, *, min_bucket: int = 8, max_batch: int = 1024) -> int:
+    """Next power-of-two >= n, clamped to [min_bucket, max_batch]."""
+    if n <= 0:
+        raise ValueError(f"batch size must be positive, got {n}")
+    b = 1 << max(0, n - 1).bit_length()
+    return max(min_bucket, min(b, max_batch))
+
+
+class PRFFuture:
+    """Result handle for a queued request (resolved by ``drain``)."""
+
+    __slots__ = ("_value", "_done")
+
+    def __init__(self):
+        self._value = None
+        self._done = False
+
+    def done(self) -> bool:
+        return self._done
+
+    def result(self) -> np.ndarray:
+        if not self._done:
+            raise RuntimeError("request not served yet — call drain()")
+        return self._value
+
+    def _resolve(self, value: np.ndarray) -> None:
+        self._value = value
+        self._done = True
+
+
+class PRFService:
+    """Serving wrapper around a trained PRF model.
+
+    >>> svc = PRFService(model)
+    >>> labels = svc.predict(x)                  # any batch size
+    >>> fut = svc.submit(x1); svc.submit(x2)     # micro-batch queue
+    >>> svc.drain(); fut.result()
+    """
+
+    def __init__(
+        self,
+        model: PRFModel,
+        *,
+        max_batch: int = 1024,
+        min_bucket: int = 8,
+        backend: Optional[str] = None,
+    ):
+        if max_batch & (max_batch - 1) or min_bucket & (min_bucket - 1):
+            raise ValueError("max_batch and min_bucket must be powers of two")
+        if min_bucket > max_batch:
+            raise ValueError(
+                f"min_bucket={min_bucket} must not exceed max_batch={max_batch}"
+            )
+        if backend is not None:
+            model = model.with_predict_backend(backend)
+        self.model = model
+        self.max_batch = max_batch
+        self.min_bucket = min_bucket
+        self._edges = jnp.asarray(model.bin_edges)
+        self._n_features = int(np.asarray(model.bin_edges).shape[0])
+        # One entry per request — a single list (under one lock) so the
+        # request order and its rows can never diverge across threads.
+        self._queue: List[Tuple[np.ndarray, bool, PRFFuture]] = []
+        self._queued_rows = 0
+        self._lock = threading.Lock()
+        self._buckets_seen: set = set()
+        self._requests_served = 0
+
+        forest = model.forest
+        cfg = forest.config
+        use_pallas = resolve_predict_backend(cfg.predict_backend) == "pallas"
+        # Payloads depend only on the trained forest — precompute ONCE
+        # at service construction so the per-request fused path does no
+        # O(k*P*C) payload work (mirrors make_sharded_vote_fn). Forest
+        # and payload are jit ARGUMENTS, not closure captures: every
+        # bucket shape compiles its own executable, and constants would
+        # embed a private copy of the model per bucket.
+        self._forest = forest
+        self._payload = build_payload(forest) if use_pallas else None
+
+        def bucket_predict(forest, payload, xb, valid):
+            # The mask zeroes padded rows' scores before the argmax /
+            # normalization — padded rows can never leak a non-neutral
+            # value even if a caller forgets to slice.
+            from ..core.forest import fused_vote_scores
+
+            if cfg.regression:
+                if use_pallas:
+                    norm = jnp.maximum(_vote_weights(forest).sum(), 1e-38)
+                    vals = fused_vote_scores(forest, xb, payload)[:, 0] / norm
+                else:
+                    vals = predict_regression(forest, xb)
+                return jnp.where(valid, vals, 0.0)
+            scores = (
+                fused_vote_scores(forest, xb, payload)
+                if use_pallas
+                else predict_scores(forest, xb)
+            )
+            scores = jnp.where(valid[:, None], scores, 0.0)
+            return jnp.argmax(scores, axis=-1)
+
+        self._bucket_predict = jax.jit(bucket_predict)
+
+    def _validate(self, x: np.ndarray) -> np.ndarray:
+        """Shape-check a request up front: a malformed request must fail
+        at its own submit/predict call, never poison an aggregated
+        micro-batch that other requests ride in."""
+        x = np.asarray(x)
+        if x.ndim == 1:
+            x = x[None]
+        if x.ndim != 2 or x.shape[1] != self._n_features:
+            raise ValueError(
+                f"expected [n, {self._n_features}] features, got {x.shape}"
+            )
+        if len(x) == 0:
+            raise ValueError("empty request")
+        return x
+
+    # -- direct (synchronous) path ---------------------------------------
+
+    def predict(self, x: np.ndarray) -> np.ndarray:
+        """Predict labels/values for any batch size (bucketed + padded)."""
+        squeeze = np.ndim(x) == 1
+        x = self._validate(x)
+        # Bin once on device and keep it there: padding with jnp.pad
+        # avoids the device->host->device round-trip a numpy pad costs
+        # on every request.
+        xb = apply_bins(jnp.asarray(x), self._edges)
+        outs = []
+        for i in range(0, len(xb), self.max_batch):
+            outs.append(self._predict_bucketed(xb[i : i + self.max_batch]))
+        out = np.concatenate(outs, axis=0)
+        return out[0] if squeeze else out
+
+    def _predict_bucketed(self, xb: jnp.ndarray) -> np.ndarray:
+        n = len(xb)
+        b = bucket_size(n, min_bucket=self.min_bucket, max_batch=self.max_batch)
+        self._buckets_seen.add(b)
+        padded = jnp.pad(xb, ((0, b - n), (0, 0)))
+        valid = jnp.arange(b) < n
+        out = self._bucket_predict(self._forest, self._payload, padded, valid)
+        return np.asarray(out)[:n]
+
+    # -- async micro-batch queue -----------------------------------------
+
+    def submit(self, x: np.ndarray) -> PRFFuture:
+        """Enqueue a request; returns a future resolved by ``drain``.
+
+        Auto-drains when the aggregated queue reaches ``max_batch``
+        rows, so a saturated queue costs one forward pass per batch.
+        """
+        single = np.ndim(x) == 1
+        x = self._validate(x)
+        fut = PRFFuture()
+        with self._lock:
+            self._queue.append((x, single, fut))
+            self._queued_rows += len(x)
+            full = self._queued_rows >= self.max_batch
+        if full:
+            self.drain()
+        return fut
+
+    @property
+    def pending(self) -> int:
+        """Number of queued (unserved) requests."""
+        return len(self._queue)
+
+    def drain(self) -> int:
+        """Serve every queued request in one aggregated micro-batch.
+
+        Resolves futures in submission order; returns the number of
+        requests served.
+        """
+        # Snapshot-and-clear under the lock, run the forward pass outside
+        # it — concurrent submits keep aggregating into the NEXT batch
+        # while this one is in flight. On failure the snapshot is
+        # re-prepended, so requests are never silently lost.
+        with self._lock:
+            if not self._queue:
+                return 0
+            queue = self._queue
+            self._queue, self._queued_rows = [], 0
+        try:
+            out = self.predict(np.concatenate([x for x, _, _ in queue]))
+        except Exception:
+            with self._lock:
+                self._queue = queue + self._queue
+                self._queued_rows += sum(len(x) for x, _, _ in queue)
+            raise
+        served = 0
+        offset = 0
+        for (x, single, fut) in queue:
+            chunk = out[offset : offset + len(x)]
+            fut._resolve(chunk[0] if single else chunk)
+            offset += len(x)
+            served += 1
+        self._requests_served += served
+        return served
+
+    def stats(self) -> dict:
+        """Serving counters — bounded-recompilation evidence included."""
+        return {
+            "buckets_compiled": sorted(self._buckets_seen),
+            "max_buckets": self.max_batch.bit_length()
+            - self.min_bucket.bit_length()
+            + 1,
+            "requests_served": self._requests_served,
+            "pending": self.pending,
+        }
+
+
+# ---------------------------------------------------------------------------
+# Tree-sharded multi-device voting
+# ---------------------------------------------------------------------------
+
+
+def make_sharded_vote_fn(forest: Forest, mesh, *, tree_axis: str = "data"):
+    """Build a jit'd multi-device predictor with trees sharded over
+    ``tree_axis``.
+
+    Each shard walks only its own ``k / axis_size`` trees (fused kernel
+    on TPU, XLA oracle elsewhere — ``config.predict_backend``) and
+    accumulates their weighted votes into an ``[N, C]`` partial score;
+    one ``psum`` combines the partials (the Eq. 9/10 sum over trees is
+    associative), then argmax / Eq. 9 normalization runs replicated.
+    Mirrors ``core/distributed``'s training-side histogram combine:
+    O(N*C) words cross the wire, never the ``[k, N, C]`` tensor.
+
+    Returns ``fn(x_binned) -> [N]`` labels (classification) or values
+    (regression). ``n_trees`` must divide evenly over ``tree_axis``.
+    """
+    cfg = forest.config
+    w = _vote_weights(forest)
+    payload = build_payload(forest)
+    depth = cfg.max_depth
+    use_pallas = resolve_predict_backend(cfg.predict_backend) == "pallas"
+    norm = jnp.maximum(w.sum(), 1e-38)
+
+    def shard(feat, thr, left, pay, xb):
+        from ..kernels.tree_traverse.ops import fused_vote
+
+        partial = fused_vote(
+            xb, feat, thr, left, pay, depth=depth, use_pallas=use_pallas
+        )
+        scores = jax.lax.psum(partial, tree_axis)            # the ONE combine
+        if cfg.regression:
+            return scores[:, 0] / norm
+        return jnp.argmax(scores, axis=-1)
+
+    fn = jax.jit(
+        _shard_map(
+            shard,
+            mesh=mesh,
+            in_specs=(P(tree_axis), P(tree_axis), P(tree_axis), P(tree_axis), P()),
+            out_specs=P(),
+        )
+    )
+
+    def run(x_binned):
+        return fn(
+            forest.feature, forest.threshold, forest.left_child, payload,
+            x_binned,
+        )
+
+    return run

@@ -97,3 +97,56 @@ def test_multiway_gr_nonnegative(seed):
     hist = jnp.asarray(rng.random((3, 8, 3)).astype(np.float32))
     gr = np.asarray(multiway_gain_ratio(hist))
     assert (gr >= -1e-4).all()
+
+
+@given(
+    seed=st.integers(0, 2 ** 16),
+    k=st.integers(1, 12), n=st.integers(1, 24), c=st.integers(2, 5),
+    scale=st.floats(0.1, 10.0),
+)
+@settings(**SETTINGS)
+def test_uniform_weighted_vote_equals_unweighted_majority(seed, k, n, c, scale):
+    """Eq. (10) with uniform weights is plain majority voting. Where the
+    majority is unique the winner matches exactly (rounding can't bridge
+    a >= scale*1 score gap); where classes tie, XLA's order-dependent
+    f32 sum may break the tie either way, so only membership in the
+    tied set is asserted."""
+    from repro.core.voting import weighted_vote
+
+    rng = np.random.default_rng(seed)
+    probs = jnp.asarray(rng.random((k, n, c)).astype(np.float32))
+    scores = weighted_vote(probs, jnp.full((k,), scale, jnp.float32))
+    pred = np.argmax(np.asarray(scores), axis=-1)
+
+    votes = np.argmax(np.asarray(probs), axis=-1)            # [k, n]
+    counts = np.zeros((n, c), np.int64)
+    for t in range(k):
+        counts[np.arange(n), votes[t]] += 1
+    top = counts.max(axis=-1)
+    unique = (counts == top[:, None]).sum(axis=-1) == 1
+    majority = np.argmax(counts, axis=-1)
+    np.testing.assert_array_equal(pred[unique], majority[unique])
+    assert (counts[np.arange(n), pred] == top).all()         # ties: still a leader
+
+
+@given(
+    seed=st.integers(0, 2 ** 16),
+    k=st.integers(1, 12), n=st.integers(1, 24),
+)
+@settings(**SETTINGS)
+def test_faithful_eq9_matches_naive_sum(seed, k, n):
+    """weighted_regression(faithful_eq9=True) is literally Eq. (9):
+    (1/k) * sum_i w_i * h_i(x), computed naively in float64."""
+    from repro.core.voting import weighted_regression
+
+    rng = np.random.default_rng(seed)
+    values = rng.standard_normal((k, n)).astype(np.float32)
+    w = rng.random(k).astype(np.float32)
+    got = np.asarray(
+        weighted_regression(jnp.asarray(values), jnp.asarray(w), faithful_eq9=True)
+    )
+    naive = np.zeros(n, np.float64)
+    for t in range(k):
+        naive += np.float64(w[t]) * values[t].astype(np.float64)
+    naive /= k
+    np.testing.assert_allclose(got, naive, rtol=1e-5, atol=1e-6)

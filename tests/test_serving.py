@@ -1,0 +1,217 @@
+"""PRF serving layer: bucketing, micro-batch queue, sharded voting.
+
+* bucketed prediction returns exactly the direct-model answer at every
+  batch size 1..33 (padding rows can never leak into real scores);
+* the jit cache is bounded by the power-of-two bucket set;
+* the async queue preserves submission order and auto-drains at
+  ``max_batch`` aggregated rows;
+* the tree-sharded ``psum`` vote combine matches single-host prediction
+  bit-for-bit on a CPU mesh (subprocess, so the multi-device XLA flag
+  never leaks into other tests).
+"""
+import json
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import ForestConfig, train_prf
+from repro.data.tabular import make_classification, make_regression, train_test_split
+from repro.serving import PRFService, bucket_size
+
+
+@pytest.fixture(scope="module")
+def served_model():
+    x, y = make_classification(n_samples=900, n_features=12, n_classes=3, seed=8)
+    xtr, ytr, xte, _ = train_test_split(x, y, 0.25, 0)
+    cfg = ForestConfig(
+        n_trees=8, max_depth=4, n_bins=16, n_classes=3, feature_mode="all"
+    )
+    model = train_prf(xtr, ytr, cfg, seed=0)
+    return model, xte
+
+
+def test_bucket_size():
+    assert [bucket_size(n) for n in (1, 7, 8, 9, 16, 17)] == [8, 8, 8, 16, 16, 32]
+    assert bucket_size(5000, max_batch=1024) == 1024
+    assert bucket_size(3, min_bucket=4) == 4
+    with pytest.raises(ValueError):
+        bucket_size(0)
+
+
+def test_service_rejects_non_power_of_two_buckets(served_model):
+    model, _ = served_model
+    with pytest.raises(ValueError):
+        PRFService(model, max_batch=100)
+    with pytest.raises(ValueError):
+        PRFService(model, min_bucket=6)
+
+
+def test_bucketing_correct_at_every_batch_size(served_model):
+    """Batch sizes 1..33 — every bucket boundary and both sides of it.
+    Results must equal the unpadded direct prediction exactly: the
+    padding mask never leaks into real rows' scores."""
+    model, xte = served_model
+    svc = PRFService(model, max_batch=32, min_bucket=8)
+    for n in range(1, 34):
+        got = svc.predict(xte[:n])
+        want = model.predict(xte[:n])
+        np.testing.assert_array_equal(got, want, err_msg=f"batch size {n}")
+    # bounded recompilation: only power-of-two buckets were compiled
+    stats = svc.stats()
+    assert set(stats["buckets_compiled"]) <= {8, 16, 32}
+    assert len(stats["buckets_compiled"]) <= stats["max_buckets"]
+
+
+def test_bucketing_correct_regression():
+    x, y = make_regression(600, 8, seed=6)
+    xtr, ytr, xte, _ = train_test_split(x, y, 0.25, 0)
+    cfg = ForestConfig(
+        n_trees=6, max_depth=4, n_bins=16, regression=True, feature_mode="all"
+    )
+    model = train_prf(xtr, ytr, cfg, seed=0)
+    svc = PRFService(model, max_batch=64, min_bucket=8)
+    for n in (1, 5, 9, 33):
+        # float values: XLA fuses the reduce differently per batch shape,
+        # so regression agrees to rounding (labels above are exact).
+        np.testing.assert_allclose(
+            svc.predict(xte[:n]), model.predict(xte[:n]), rtol=1e-6, atol=1e-6
+        )
+
+
+def test_single_sample_shape(served_model):
+    model, xte = served_model
+    svc = PRFService(model)
+    got = svc.predict(xte[0])
+    assert np.ndim(got) == 0
+    assert got == model.predict(xte[:1])[0]
+
+
+def test_queue_drain_preserves_request_order(served_model):
+    model, xte = served_model
+    svc = PRFService(model, max_batch=256)
+    sizes = [3, 1, 7, 2, 5]
+    futs, offsets = [], []
+    off = 0
+    for n in sizes:
+        futs.append(svc.submit(xte[off : off + n]))
+        offsets.append(off)
+        off += n
+    assert svc.pending == len(sizes)
+    assert all(not f.done() for f in futs)
+    with pytest.raises(RuntimeError):
+        futs[0].result()
+    assert svc.drain() == len(sizes)
+    assert svc.pending == 0
+    want = model.predict(xte[:off])
+    for n, off0, fut in zip(sizes, offsets, futs):
+        np.testing.assert_array_equal(fut.result(), want[off0 : off0 + n])
+
+
+def test_queue_auto_drains_at_max_batch(served_model):
+    model, xte = served_model
+    svc = PRFService(model, max_batch=8, min_bucket=8)
+    futs = [svc.submit(xte[i : i + 4]) for i in range(0, 12, 4)]
+    # second submit reached max_batch=8 rows -> those two auto-drained;
+    # the third is still queued until an explicit drain.
+    assert futs[0].done() and futs[1].done() and not futs[2].done()
+    assert svc.pending == 1
+    assert svc.drain() == 1
+    for i, f in enumerate(futs):
+        np.testing.assert_array_equal(
+            f.result(), model.predict(xte[4 * i : 4 * i + 4])
+        )
+
+
+def test_drain_empty_queue_is_noop(served_model):
+    model, _ = served_model
+    assert PRFService(model).drain() == 0
+
+
+def test_submit_rejects_malformed_requests(served_model):
+    """Validation happens at submit time, so a bad request fails its own
+    call instead of poisoning the aggregated micro-batch."""
+    model, xte = served_model
+    svc = PRFService(model)
+    with pytest.raises(ValueError):
+        svc.submit(np.empty((0, 12)))              # empty
+    with pytest.raises(ValueError):
+        svc.submit(np.zeros((2, 99)))              # wrong feature width
+    with pytest.raises(ValueError):
+        svc.predict(np.zeros((2, 3, 4)))           # wrong rank
+    assert svc.pending == 0                        # nothing was enqueued
+
+
+def test_failed_drain_keeps_requests_queued(served_model, monkeypatch):
+    """A forward-pass failure must not silently drop queued futures —
+    the snapshot is re-prepended and a later drain serves it."""
+    model, xte = served_model
+    svc = PRFService(model, max_batch=256)
+    good = svc.submit(xte[:3])
+    calls = {"n": 0}
+    real_predict = PRFService.predict
+
+    def flaky(self, x):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise RuntimeError("transient device failure")
+        return real_predict(self, x)
+
+    monkeypatch.setattr(PRFService, "predict", flaky)
+    with pytest.raises(RuntimeError):
+        svc.drain()
+    assert svc.pending == 1 and not good.done()    # nothing lost
+    assert svc.drain() == 1                        # retry succeeds
+    np.testing.assert_array_equal(good.result(), model.predict(xte[:3]))
+
+
+def test_sharded_vote_matches_single_host_bit_for_bit():
+    """Tree-sharded partial votes + one psum == single-host prediction,
+    classification and regression, on an 8-device host mesh."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import json
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import ForestConfig, train_prf
+        from repro.core.binning import apply_bins
+        from repro.core.voting import predict, predict_regression
+        from repro.data.tabular import (
+            make_classification, make_regression, train_test_split,
+        )
+        from repro.launch.mesh import make_mesh
+        from repro.serving import make_sharded_vote_fn
+
+        mesh = make_mesh((8,), ("data",))
+
+        x, y = make_classification(n_samples=800, n_features=12, n_classes=3, seed=0)
+        xtr, ytr, xte, yte = train_test_split(x, y, 0.25, 0)
+        cfg = ForestConfig(n_trees=16, max_depth=4, n_bins=16, n_classes=3,
+                           feature_mode="all")
+        m = train_prf(xtr, ytr, cfg, seed=0)
+        xbte = apply_bins(jnp.asarray(xte), jnp.asarray(m.bin_edges))
+        got = np.asarray(make_sharded_vote_fn(m.forest, mesh, tree_axis="data")(xbte))
+        want = np.asarray(predict(m.forest, xbte))
+        cls_equal = bool((got == want).all())
+
+        x, y = make_regression(800, 10, seed=1)
+        xtr, ytr, xte, yte = train_test_split(x, y, 0.25, 0)
+        cfg = ForestConfig(n_trees=16, max_depth=4, n_bins=16, regression=True,
+                           feature_mode="all")
+        m = train_prf(xtr, ytr, cfg, seed=0)
+        xbte = apply_bins(jnp.asarray(xte), jnp.asarray(m.bin_edges))
+        got = np.asarray(make_sharded_vote_fn(m.forest, mesh, tree_axis="data")(xbte))
+        want = np.asarray(predict_regression(m.forest, xbte))
+        reg_close = bool(np.allclose(got, want, rtol=1e-5, atol=1e-6))
+
+        print(json.dumps({"cls_equal": cls_equal, "reg_close": reg_close}))
+    """)
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True, timeout=900,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["cls_equal"], "sharded classification labels differ from single-host"
+    assert res["reg_close"], "sharded regression values differ from single-host"
