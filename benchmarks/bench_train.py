@@ -1,0 +1,102 @@
+"""Training-path benchmarks — the growth-engine trajectory rows.
+
+``train_e2e_resident`` times the unified engine's jitted
+``grow_forest`` (early-exit while_loop, whole dataset device-resident);
+``train_e2e_streamed`` the host-streaming ``grow_forest_streamed``
+driver on the same data split into 4 sample blocks (includes the
+host<->device block feed, the out-of-core price); ``train_early_exit``
+a cleanly-separable dataset under a generous depth budget (trees
+purify and their frontiers die at ~1/4 of ``max_depth`` — the
+realistic over-budgeted case), with the fixed-depth time of the
+bit-identical forest in ``fixed_depth_us`` — the level-count saving
+the early-exit scheduler buys. Rows land in BENCH_kernels.json next to
+the kernel series (see PERF.md).
+"""
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.api import grow_forest_streamed
+from repro.core.binning import bin_dataset
+from repro.core.dsi import bootstrap_counts
+from repro.core.forest import grow_forest
+from repro.core.types import ForestConfig
+from repro.data.tabular import make_classification
+
+K, N, F, B, C, DEPTH = 8, 4096, 32, 16, 3, 6
+N_BLOCKS = 4
+SHAPE = f"k={K},N={N},F={F},B={B},C={C},depth={DEPTH}"
+
+
+def _time(fn, reps=3):
+    fn()  # compile / warm the jit caches
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn()
+        jax.block_until_ready(jax.tree_util.tree_leaves(out))
+    return (time.time() - t0) / reps * 1e6
+
+
+def _setup():
+    x, y = make_classification(
+        n_samples=N, n_features=F, n_classes=C, n_informative=8, seed=5
+    )
+    cfg = ForestConfig(
+        n_trees=K, max_depth=DEPTH, n_bins=B, n_classes=C, feature_mode="all"
+    )
+    xb, _ = bin_dataset(x, cfg.n_bins)
+    w = np.asarray(
+        bootstrap_counts(jax.random.PRNGKey(0), K, N)
+    ).astype(np.float32)
+    return xb, y, w, cfg
+
+
+def run():
+    rows = []
+    xb, y, w, cfg = _setup()
+    xb_dev, y_dev, w_dev = jnp.asarray(xb), jnp.asarray(y), jnp.asarray(w)
+
+    rows.append({
+        "bench": "train_e2e_resident",
+        "us_per_call": _time(lambda: grow_forest(xb_dev, y_dev, w_dev, cfg)),
+        "derived": SHAPE,
+    })
+
+    blocks = np.array_split(xb, N_BLOCKS)
+    rows.append({
+        "bench": "train_e2e_streamed",
+        "us_per_call": _time(lambda: grow_forest_streamed(blocks, y, w, cfg)),
+        "derived": f"{SHAPE},blocks={N_BLOCKS}",
+    })
+
+    # Over-budgeted depth on separable data: trees purify and every
+    # frontier dies at ~level 4 of a 16-level budget, so the early-exit
+    # while_loop skips ~3/4 of the level work; the fixed-depth run of
+    # the *bit-identical* forest is the baseline the saving is measured
+    # against. max_frontier bounds S (the default 2**16 frontier would
+    # dominate the timing with dead-slot histogram work).
+    x2, y2 = make_classification(
+        n_samples=N, n_features=F, n_classes=C, n_informative=10,
+        class_sep=3.0, label_noise=0.0, seed=5,
+    )
+    xb2, _ = bin_dataset(x2, B)
+    deep = dataclasses.replace(
+        cfg, max_depth=16, max_frontier=64, min_samples_split=32,
+        early_exit=True,
+    )
+    fixed = dataclasses.replace(deep, early_exit=False)
+    xb2_dev, y2_dev = jnp.asarray(xb2), jnp.asarray(y2)
+    us_ee = _time(lambda: grow_forest(xb2_dev, y2_dev, w_dev, deep))
+    us_fx = _time(lambda: grow_forest(xb2_dev, y2_dev, w_dev, fixed))
+    rows.append({
+        "bench": "train_early_exit",
+        "us_per_call": us_ee,
+        "derived": f"{SHAPE.replace(f'depth={DEPTH}', 'depth=16')},"
+                   "S=64,separable",
+        "fixed_depth_us": us_fx,
+        "speedup_vs_fixed": us_fx / max(us_ee, 1e-9),
+    })
+    return rows

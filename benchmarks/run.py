@@ -1,11 +1,12 @@
 """Benchmark aggregator — one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV lines (plus a JSON dump in
-artifacts/bench.json for EXPERIMENTS.md). The kernels suite is
-additionally written to ``BENCH_kernels.json`` at the repo root so the
-T_GR backend perf trajectory is tracked across PRs (see PERF.md).
+artifacts/bench.json for EXPERIMENTS.md). The kernels + train suites
+are additionally written to ``BENCH_kernels.json`` at the repo root so
+the kernel-backend AND growth-engine perf trajectories are tracked
+across PRs (see PERF.md).
 
-``--only SUITE`` runs a single suite (e.g. ``--only kernels``).
+``--only SUITE[,SUITE...]`` runs a subset (e.g. ``--only kernels,train``).
 """
 import argparse
 import json
@@ -17,12 +18,16 @@ _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def main(argv=None) -> None:
-    from . import bench_accuracy, bench_comm, bench_kernels, bench_oob, bench_time, bench_volume
+    from . import (
+        bench_accuracy, bench_comm, bench_kernels, bench_oob, bench_time,
+        bench_train, bench_volume,
+    )
 
     parser = argparse.ArgumentParser()
     parser.add_argument(
         "--only", default=None,
-        help="run a single suite: accuracy|oob|volume|comm|time|kernels",
+        help="comma-separated suite subset: "
+             "accuracy|oob|volume|comm|time|kernels|train",
     )
     args = parser.parse_args(argv)
 
@@ -34,13 +39,16 @@ def main(argv=None) -> None:
         ("comm", "comm (Fig. 15)", bench_comm.run),
         ("time", "time/scaling (Figs. 11-13)", bench_time.run),
         ("kernels", "kernels", bench_kernels.run),
+        ("train", "train (growth engine)", bench_train.run),
     ]
     if args.only is not None:
-        suites = [s for s in suites if s[0] == args.only]
-        if not suites:
-            raise SystemExit(f"unknown suite {args.only!r}")
+        wanted = [s.strip() for s in args.only.split(",") if s.strip()]
+        unknown = set(wanted) - {s[0] for s in suites}
+        if unknown:
+            raise SystemExit(f"unknown suite(s) {sorted(unknown)!r}")
+        suites = [s for s in suites if s[0] in wanted]
 
-    kernel_rows = None
+    tracked_rows = {}                    # suite key -> rows in BENCH_kernels.json
     print("name,us_per_call,derived")
     for key, title, fn in suites:
         t0 = time.time()
@@ -57,8 +65,8 @@ def main(argv=None) -> None:
             }
             print(f"{name},{us:.1f},{json.dumps(derived)}")
         all_rows.extend(rows)
-        if key == "kernels":
-            kernel_rows = rows
+        if key in ("kernels", "train"):
+            tracked_rows[key] = rows
         print(f"# suite '{title}' done in {time.time()-t0:.1f}s", file=sys.stderr)
 
     # Only a full run may replace the aggregate dump EXPERIMENTS.md reads;
@@ -68,16 +76,19 @@ def main(argv=None) -> None:
         with open("artifacts/bench.json", "w") as f:
             json.dump(all_rows, f, indent=2, default=str)
 
-    # Likewise, a failed kernels suite must not wipe the tracked perf
-    # trajectory at the repo root.
-    if kernel_rows is not None and not any("error" in r for r in kernel_rows):
+    # BENCH_kernels.json tracks the kernel + training-engine trajectory.
+    # Only rewrite it when BOTH suites ran green, so a failed or partial
+    # run (--only kernels) never wipes half the tracked series.
+    if set(tracked_rows) == {"kernels", "train"} and not any(
+        "error" in r for rows in tracked_rows.values() for r in rows
+    ):
         import jax
 
         payload = {
             "jax_backend": jax.default_backend(),
             "note": "interpret-mode Pallas timings off-TPU measure "
                     "emulation, not hardware; track deltas per backend",
-            "rows": kernel_rows,
+            "rows": tracked_rows["kernels"] + tracked_rows["train"],
         }
         with open(os.path.join(_REPO_ROOT, "BENCH_kernels.json"), "w") as f:
             json.dump(payload, f, indent=2, default=str)

@@ -1,9 +1,10 @@
 """PRF — the paper's contribution: Parallel Random Forest in JAX.
 
 Public surface:
-  ForestConfig, Forest            core/types.py
-  train_prf, PRFModel             core/api.py
-  train_prf_distributed           core/distributed.py (mesh-sharded)
+  ForestConfig, Forest, GrowthState  core/types.py
+  train_prf, PRFModel                core/api.py
+  grow_forest_streamed               core/api.py (out-of-core sample blocks)
+  train_prf_distributed              core/distributed.py (mesh-sharded)
 """
-from .types import Forest, ForestConfig  # noqa: F401
-from .api import PRFModel, train_prf  # noqa: F401
+from .types import Forest, ForestConfig, GrowthState  # noqa: F401
+from .api import PRFModel, grow_forest_streamed, train_prf  # noqa: F401

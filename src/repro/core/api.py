@@ -4,12 +4,16 @@
         -> level-synchronous growth (Alg. 4.2) -> OOB weights (Eq. 8)
 
 ``train_prf`` is the single-host path; ``repro.core.distributed`` offers
-the mesh-sharded version with identical semantics.
+the mesh-sharded version with identical semantics, and
+``grow_forest_streamed`` the host-streaming out-of-core growth driver
+(sample blocks fed from a NumPy/memmap source — the full ``[N, F]``
+matrix is never passed to one device call).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from functools import partial
+from typing import Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -18,7 +22,13 @@ import numpy as np
 from .binning import bin_dataset, apply_bins
 from .dimred import dimension_reduction, random_feature_mask
 from .dsi import bootstrap_counts
+from .engine import (
+    LocalPlane, _safe_mean, finalize_forest, init_forest, next_frontier,
+    plan_level, route_level, write_level,
+)
 from .forest import grow_forest
+from .gain import level_scores, resolve_split_backend
+from .histograms import class_channels, level_histograms, regression_channels
 from .types import Forest, ForestConfig
 from .voting import (
     oob_accuracy, oob_r2, predict, predict_regression, predict_scores,
@@ -108,3 +118,174 @@ def train_prf(
         forest = dataclasses.replace(forest, tree_weight=w)
 
     return PRFModel(forest=forest, bin_edges=edges)
+
+
+# ---------------------------------------------------------------------------
+# Host-streaming out-of-core growth (sample-block streaming)
+# ---------------------------------------------------------------------------
+
+
+def _channels(y: jnp.ndarray, config: ForestConfig) -> jnp.ndarray:
+    return (
+        regression_channels(y)
+        if config.regression
+        else class_channels(y, config.n_classes)
+    )
+
+
+@partial(jax.jit, static_argnames=("config",))
+def _stream_init(level0_hist, config):
+    """Root node from the accumulated level-0 histogram: at level 0
+    every sample sits in slot 0, so one feature's bin marginal IS the
+    [k, C] root class counts — no extra pass over the blocks."""
+    root_counts = level0_hist[:, 0, 0].sum(axis=1)
+    forest = init_forest(config)
+    forest = dataclasses.replace(
+        forest, class_counts=forest.class_counts.at[:, 0].set(root_counts)
+    )
+    if config.regression:
+        forest = dataclasses.replace(
+            forest, value=forest.value.at[:, 0].set(_safe_mean(root_counts))
+        )
+    return forest
+
+
+@partial(jax.jit, static_argnames=("config",))
+def _stream_hist(hist_acc, xb_b, y_b, w_b, slot_b, slot_node, config):
+    """Fold one sample block into the level histogram carry — the host
+    side of the resumable T_GR accumulation. Trees whose frontiers died
+    contribute zero-weight (masked) work, exactly as in the engine."""
+    tree_live = jnp.any(slot_node >= 0, axis=1)
+    w_lvl = w_b * tree_live[:, None].astype(w_b.dtype)
+    h = level_histograms(
+        xb_b, _channels(y_b, config), w_lvl, slot_b,
+        n_slots=config.frontier, n_bins=config.n_bins,
+        packed=config.packed_hist and not config.regression,
+        backend=config.hist_backend,
+    )
+    return hist_acc + h
+
+
+@partial(jax.jit, static_argnames=("config",))
+def _stream_plan_write(forest, slot_node, hist, feature_mask, level, config):
+    """T_NS + node writes for one level, from the accumulated histogram.
+    Runs the same plan/write/frontier pieces as the resident engine."""
+    scores, n_node = level_scores(
+        hist, feature_mask, regression=config.regression,
+        backend=resolve_split_backend(config.split_backend),
+    )
+    split_rank, is_split, child_base = plan_level(
+        scores, n_node, slot_node, config, level
+    )
+    forest = write_level(
+        forest, slot_node, split_rank, is_split, child_base, scores, config
+    )
+    new_slot_node = next_frontier(is_split, child_base, config.frontier)
+    return forest, scores, split_rank, new_slot_node
+
+
+@jax.jit
+def _stream_route(xb_b, slot_b, split_rank, scores):
+    return route_level(xb_b, slot_b, split_rank, scores, LocalPlane())
+
+
+def grow_forest_streamed(
+    x_binned: Union[np.ndarray, Sequence[np.ndarray]],
+    y: np.ndarray,
+    weights: np.ndarray,
+    config: ForestConfig,
+    feature_mask: Optional[np.ndarray] = None,
+) -> Forest:
+    """Out-of-core ``grow_forest``: train from host-resident sample blocks.
+
+    ``x_binned`` is either a host array / ``np.memmap`` of binned
+    features ``[N, F]`` (sliced into ``config.sample_block``-row views —
+    no copy; ``sample_block > 0`` is required so the full matrix can
+    never silently become one device block) or an explicit sequence of
+    ``[Nb, F]`` blocks. Each device call only ever sees one block: per
+    level, one pass accumulates the ``[k, S, F, B, C]`` level histogram
+    block by block (the resumable T_GR carry), one jitted call scores +
+    writes the level with the engine's shared ``plan_level`` /
+    ``write_level`` / ``next_frontier`` pieces, and a second pass routes
+    each block's samples to their child slots. Root class counts come
+    for free from the level-0 histogram (every sample sits in slot 0),
+    so each level reads the data exactly once for histograms. The
+    per-sample frontier table stays host-resident, so device memory
+    holds O(sample_block * F + k*S*F*B*C) — independent of N.
+
+    DSI counts are integer-valued, so the blocked accumulation is
+    bit-exact for classification: the result equals the resident
+    ``grow_forest`` forest array for array (tests/test_engine.py pins
+    this across >= 4 blocks). Regression channels agree to float
+    rounding. Host-side early exit stops the level loop as soon as
+    every tree's frontier is empty (always on — the loop is host-driven
+    and the forests are identical either way; ``config.early_exit``
+    only gates the device-side ``lax.while_loop``).
+    """
+    from ..data.pipeline import sample_blocks
+
+    y_np = np.asarray(y)
+    w_np = np.asarray(weights, dtype=np.float32)
+    if not isinstance(x_binned, (list, tuple)) and config.sample_block <= 0:
+        raise ValueError(
+            "grow_forest_streamed with an array/memmap source needs "
+            "config.sample_block > 0 — sample_block=0 would feed the whole "
+            "[N, F] matrix as one device block, which is exactly what this "
+            "path exists to avoid (pass an explicit block list to stream "
+            "from a custom source)"
+        )
+    blocks = sample_blocks(x_binned, config.sample_block)
+    sizes = [b.shape[0] for b in blocks]
+    offsets = np.concatenate([[0], np.cumsum(sizes)])
+    if offsets[-1] != y_np.shape[0] or offsets[-1] != w_np.shape[1]:
+        raise ValueError(
+            f"blocks cover {offsets[-1]} samples, but y has {y_np.shape[0]} "
+            f"and weights {w_np.shape[1]}"
+        )
+    if config.regression:
+        y_np = y_np.astype(np.float32)
+
+    k, S = config.n_trees, config.frontier
+    F = blocks[0].shape[1]
+    B = config.n_bins
+    C = 3 if config.regression else config.n_classes
+    mask_dev = None if feature_mask is None else jnp.asarray(feature_mask)
+
+    def block_args(i):
+        o0, o1 = offsets[i], offsets[i + 1]
+        return jnp.asarray(blocks[i]), jnp.asarray(y_np[o0:o1]), \
+            jnp.asarray(w_np[:, o0:o1])
+
+    slot_node = jnp.full((k, S), -1, jnp.int32).at[:, 0].set(0)
+    slot_blocks = [np.zeros((k, n), np.int32) for n in sizes]
+
+    def level_hist():
+        hist = jnp.zeros((k, S, F, B, C), jnp.float32)
+        for i in range(len(blocks)):
+            xb_b, y_b, w_b = block_args(i)
+            hist = _stream_hist(
+                hist, xb_b, y_b, w_b, jnp.asarray(slot_blocks[i]),
+                slot_node, config,
+            )
+        return hist
+
+    forest = None
+    for level in range(config.max_depth):
+        if not np.any(np.asarray(slot_node) >= 0):
+            break                                   # every frontier is empty
+        hist = level_hist()
+        if forest is None:
+            forest = _stream_init(hist, config)     # root node, free at level 0
+        forest, scores, split_rank, slot_node = _stream_plan_write(
+            forest, slot_node, hist, mask_dev, jnp.asarray(level, jnp.int32),
+            config,
+        )
+        for i in range(len(blocks)):
+            slot_blocks[i] = np.asarray(_stream_route(
+                jnp.asarray(blocks[i]), jnp.asarray(slot_blocks[i]),
+                split_rank, scores,
+            ))
+
+    if forest is None:              # max_depth == 0: root node only
+        forest = _stream_init(level_hist(), config)
+    return finalize_forest(forest)

@@ -54,10 +54,7 @@ def _shard_map(f, *, mesh, in_specs, out_specs):
               check_rep=False)
 
 from .dsi import bootstrap_counts
-from .forest import (
-    _gather_feature_bins, _rank_splits, _safe_mean, chunked_level_scores,
-    init_forest,
-)
+from .engine import CollectivePlane, _gather_feature_bins, grow
 from .gain import SplitScores, multiway_gain_ratio
 from .histograms import class_channels, level_histograms, regression_channels
 from .types import Forest, ForestConfig
@@ -84,7 +81,8 @@ def _masked_psum(val, mine, axis):
 
 
 def _global_best_splits(
-    scores: SplitScores, n_node, axes, f_global_local: jnp.ndarray
+    scores: SplitScores, n_node, axes, f_global_local: jnp.ndarray,
+    n_bins: int,
 ):
     """T_NS across shards: gather per-shard leaders, pick the winner.
 
@@ -92,12 +90,24 @@ def _global_best_splits(
     feature axis in the paper-faithful layout, or (data, feature) when
     the histogram combine is a reduce-scatter (§Perf).
     ``f_global_local``: this shard's features mapped to global ids.
+
+    Equal-gain ties are broken on the smallest global
+    ``(feature, threshold)`` key — the order the single-host flat argmax
+    uses — NOT on gather order: under the reduce-scatter layout the
+    shards' feature ranges interleave over the data axis, so gather
+    order disagrees with global feature order and tie-breaking on it
+    made ``psum_scatter`` forests diverge from every other plane (the
+    paper-faithful psum layout gathers shards in feature order, where
+    the two rules coincide). This keeps all planes bit-identical.
     """
     axes = tuple(axes)
     my = _multi_axis_index(axes)
     gr_all = jax.lax.all_gather(scores.gain_ratio, axes)            # [P, k, S]
-    win = jnp.argmax(gr_all, axis=0)                                # [k, S]
     best_gr = jnp.max(gr_all, axis=0)
+    key = f_global_local * n_bins + scores.threshold                # [k, S]
+    key_all = jax.lax.all_gather(key, axes)                         # [P, k, S]
+    key_all = jnp.where(gr_all == best_gr, key_all, jnp.iinfo(jnp.int32).max)
+    win = jnp.argmin(key_all, axis=0)                               # [k, S]
     mine = win == my
     f_global = _masked_psum(f_global_local, mine, axes)
     thr = _masked_psum(scores.threshold, mine, axes)
@@ -107,139 +117,88 @@ def _global_best_splits(
     return SplitScores(best_gr, f_global, thr, lcnt, rcnt), n_node, mine
 
 
-def _grow_sharded(
-    xb_loc, base_loc, w_loc, mask_loc, config: ForestConfig,
-    *, sample_axes, feature_axis,
-):
-    """Level-synchronous growth on one device's (sample x feature) block."""
-    Nl, Fl = xb_loc.shape
-    k, S = config.n_trees, config.frontier
-    n_max = config.max_splits_per_level
-    depth = config.max_depth
-    pad = config.max_nodes
-    midx = jax.lax.axis_index(feature_axis)
+class MeshPlane(CollectivePlane):
+    """The engine's collective plane for the vertical-partition mesh.
 
-    forest = init_forest(config)
-    root_counts = jax.lax.psum(
-        jnp.einsum("kn,nc->kc", w_loc, base_loc), sample_axes
-    )
-    forest = dataclasses.replace(
-        forest, class_counts=forest.class_counts.at[:, 0].set(root_counts)
-    )
-    if config.regression:
-        forest = dataclasses.replace(
-            forest,
-            value=forest.value.at[:, 0].set(_safe_mean(root_counts)),
+    T_GR combine strategy (``combine_hist``): plain psum (paper-faithful:
+    every sample shard ends with the full feature-shard histogram) or
+    reduce-scatter (§Perf: histogram shards over (sample x feature) —
+    half the wire bytes, 1/P_data of the redundant gain-ratio compute).
+    ``merge_winners`` is the T_NS cross-shard argmax merge
+    (``_global_best_splits``), mapping per-shard feature ids to global
+    ids first. ``broadcast_route``: the winning feature lives on exactly
+    one feature shard; it computes the go-right bit, a masked psum
+    broadcasts it (the paper's "result distributed to all slaves").
+    """
+
+    def __init__(
+        self, config: ForestConfig, n_local_features: int, mask_loc,
+        *, sample_axes, feature_axis,
+    ):
+        self.sample_axes = tuple(sample_axes)
+        self.feature_axis = feature_axis
+        self.n_bins = config.n_bins
+        self.Fl = Fl = n_local_features
+        self.midx = jax.lax.axis_index(feature_axis)
+        self.use_rs = (
+            config.hist_reduce == "psum_scatter"
+            and len(self.sample_axes) == 1
+            and Fl % _axis_size(self.sample_axes[0]) == 0
         )
-
-    slot_node = jnp.full((k, S), -1, jnp.int32).at[:, 0].set(0)
-    sample_slot = jnp.zeros((k, Nl), jnp.int32)
-    t_idx = jnp.arange(k)[:, None]
-
-    # T_GR combine strategy: plain psum (paper-faithful: every sample
-    # shard ends with the full feature-shard histogram) or reduce-scatter
-    # (§Perf: histogram shards over (sample x feature) — half the wire
-    # bytes, 1/P_data of the redundant gain-ratio compute).
-    use_rs = (
-        config.hist_reduce == "psum_scatter"
-        and len(sample_axes) == 1
-        and Fl % _axis_size(sample_axes[0]) == 0
-    )
-
-    def level_step(carry, level):
-        forest, slot_node, sample_slot = carry
-
-        if use_rs:
-            def reduce_fn(h):  # h [tc, S, Fl, B, C] -> scatter Fl over data
-                return jax.lax.psum_scatter(
-                    h, sample_axes[0], scatter_dimension=2, tiled=True
-                )
-
-            didx = jax.lax.axis_index(sample_axes[0])
-            d_size = _axis_size(sample_axes[0])
-            fl_sub = Fl // d_size
+        if self.use_rs:
+            self.didx = jax.lax.axis_index(self.sample_axes[0])
+            self.fl_sub = Fl // _axis_size(self.sample_axes[0])
             mask_src = (
                 mask_loc if mask_loc is not None
                 else jnp.ones((config.n_trees, Fl), jnp.bool_)
             )
-            mask_rs = jax.lax.dynamic_slice_in_dim(
-                mask_src, didx * fl_sub, fl_sub, 1
+            # Post-scatter each shard scores its (data, feature) slice.
+            self.level_mask = jax.lax.dynamic_slice_in_dim(
+                mask_src, self.didx * self.fl_sub, self.fl_sub, 1
             )
-            scores_loc, n_node_loc = chunked_level_scores(
-                xb_loc, base_loc, w_loc, sample_slot, mask_rs, config,
-                hist_reduce=reduce_fn,
-            )
-            f_glob = scores_loc.feature + midx * Fl + didx * fl_sub
-            scores, n_node, _ = _global_best_splits(
-                scores_loc, n_node_loc, (sample_axes[0], feature_axis), f_glob
+            self.combine_hist = lambda h: jax.lax.psum_scatter(
+                h, self.sample_axes[0], scatter_dimension=2, tiled=True
             )
         else:
-            scores_loc, n_node_loc = chunked_level_scores(
-                xb_loc, base_loc, w_loc, sample_slot, mask_loc, config,
-                hist_reduce=lambda h: jax.lax.psum(h, sample_axes),
-            )
-            scores, n_node, _ = _global_best_splits(
-                scores_loc, n_node_loc, (feature_axis,),
-                scores_loc.feature + midx * Fl,
-            )
+            self.level_mask = mask_loc
+            self.combine_hist = lambda h: jax.lax.psum(h, self.sample_axes)
 
-        active = slot_node >= 0
-        valid = (
-            active
-            & (scores.gain_ratio > config.min_gain)
-            & (n_node >= config.min_samples_split)
-        )
-        split_rank = _rank_splits(scores.gain_ratio, valid, n_max)
-        is_split = split_rank >= 0
+    def reduce_root(self, root_counts):
+        return jax.lax.psum(root_counts, self.sample_axes)
 
-        child_base = 1 + 2 * n_max * level
-        left_id = child_base + 2 * split_rank
-        node_or_pad = jnp.where(is_split, slot_node, pad)
-
-        feature = forest.feature.at[t_idx, node_or_pad].set(
-            jnp.where(is_split, scores.feature, -1)
-        )
-        threshold = forest.threshold.at[t_idx, node_or_pad].set(scores.threshold)
-        left_child = forest.left_child.at[t_idx, node_or_pad].set(left_id)
-        lid = jnp.where(is_split, left_id, pad)
-        rid = jnp.where(is_split, left_id + 1, pad)
-        class_counts = forest.class_counts.at[t_idx, lid].set(scores.left_counts)
-        class_counts = class_counts.at[t_idx, rid].set(scores.right_counts)
-        if config.regression:
-            lval = _safe_mean(scores.left_counts)
-            rval = _safe_mean(scores.right_counts)
-            value = forest.value.at[t_idx, lid].set(lval).at[t_idx, rid].set(rval)
+    def merge_winners(self, scores, n_node):
+        if self.use_rs:
+            f_glob = scores.feature + self.midx * self.Fl + self.didx * self.fl_sub
+            axes = (self.sample_axes[0], self.feature_axis)
         else:
-            value = forest.value
-        forest = dataclasses.replace(
-            forest, feature=feature, threshold=threshold,
-            left_child=left_child, class_counts=class_counts, value=value,
+            f_glob = scores.feature + self.midx * self.Fl
+            axes = (self.feature_axis,)
+        scores, n_node, _ = _global_best_splits(
+            scores, n_node, axes, f_glob, self.n_bins
         )
+        return scores, n_node
 
-        # Route local samples: the winning feature lives on exactly one
-        # feature shard; it computes the go-right bit, a masked psum
-        # broadcasts it (the paper's "result distributed to all slaves").
-        live = sample_slot >= 0
-        s_safe = jnp.where(live, sample_slot, 0)
-        rank_i = jnp.take_along_axis(split_rank, s_safe, 1)          # [k, Nl]
-        f_i = jnp.take_along_axis(scores.feature, s_safe, 1)         # global ids
-        thr_i = jnp.take_along_axis(scores.threshold, s_safe, 1)
-        f_shard = f_i // Fl
-        f_here = jnp.where(f_shard == midx, f_i - midx * Fl, 0)
-        bins_i = _gather_feature_bins(xb_loc, f_here)                # [k, Nl]
-        go_loc = jnp.where(f_shard == midx, (bins_i > thr_i).astype(jnp.int32), 0)
-        go_right = jax.lax.psum(go_loc, feature_axis)                # [k, Nl]
-        new_slot = jnp.where(live & (rank_i >= 0), 2 * rank_i + go_right, -1)
+    def broadcast_route(self, xb_loc, f_i, thr_i):
+        f_shard = f_i // self.Fl                                 # global ids
+        f_here = jnp.where(f_shard == self.midx, f_i - self.midx * self.Fl, 0)
+        bins_i = _gather_feature_bins(xb_loc, f_here)            # [k, Nl]
+        go_loc = jnp.where(
+            f_shard == self.midx, (bins_i > thr_i).astype(jnp.int32), 0
+        )
+        return jax.lax.psum(go_loc, self.feature_axis)
 
-        j = jnp.arange(S)[None, :]
-        n_children = 2 * is_split.sum(-1, keepdims=True)
-        new_slot_node = jnp.where(j < n_children, child_base + j, -1).astype(jnp.int32)
-        return (forest, new_slot_node, new_slot), None
 
-    (forest, _, _), _ = jax.lax.scan(
-        level_step, (forest, slot_node, sample_slot), jnp.arange(depth)
+def _grow_sharded(
+    xb_loc, base_loc, w_loc, mask_loc, config: ForestConfig,
+    *, sample_axes, feature_axis,
+):
+    """Level-synchronous growth on one device's (sample x feature) block
+    — a thin entry point over the unified engine (core/engine.py)."""
+    plane = MeshPlane(
+        config, xb_loc.shape[1], mask_loc,
+        sample_axes=sample_axes, feature_axis=feature_axis,
     )
-    return forest
+    return grow(xb_loc, base_loc, w_loc, config, plane)
 
 
 def _route_sharded(forest: Forest, xb_loc, *, feature_axis: str):

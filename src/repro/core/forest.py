@@ -1,213 +1,33 @@
-"""Level-synchronous PRF training & prediction (paper Alg. 4.2, TPU-native).
+"""Single-host PRF training & prediction entry points (paper Alg. 4.2).
 
-The paper's task DAG (Fig. 6) maps onto arrays:
+Training is one thin call into the unified task-DAG growth engine
+(``core/engine.py``): ``grow_forest`` builds a ``LocalPlane`` (identity
+collectives — the whole ``[N, F]`` block lives on one device) and runs
+the engine's ``lax.while_loop`` level-step. The mesh-sharded trainer
+(``core/distributed.py``) and the host-streaming out-of-core driver
+(``core.api.grow_forest_streamed``) run the exact same level-step over
+their own planes, so the growth logic exists once.
 
-* DAG stage  -> one iteration of a ``lax.scan`` over tree depth;
-* T_GR tasks -> the [k trees x S frontier slots x F features] histogram +
-                gain-ratio tensor computed in one fused step (dual
-                parallelism of §4.2.1: trees AND features concurrently);
-* T_NS tasks -> the argmax over (feature, threshold) + child allocation.
+The T_GR/T_NS chunking machinery (``chunked_level_scores``,
+``fused_level_scores``) and the shared node-pool helpers live in
+``core/engine.py`` and are re-exported here for compatibility.
 
-Trees live in a flat node pool; level L allocates children inside band
-``[1 + 2*S*L, 1 + 2*S*(L+1))`` so allocation is pure index math. A beam
-limit (``max_frontier``) turns growth into LightGBM-style best-first
-expansion and bounds histogram memory at any scale; ``tree_chunk`` bounds
-it in the ensemble direction (trees processed in chunks per level — the
-paper's "tasks of different trees dispatched in groups").
+Prediction (``route_to_leaves`` + the fused traversal path) stays here.
 """
 from __future__ import annotations
 
-import dataclasses
 from functools import partial
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from .gain import SplitScores, level_scores, node_counts, resolve_split_backend
-from .histograms import (
-    class_channels, hist_feature_slab, level_histograms, regression_channels,
+from .engine import (  # noqa: F401  (re-exported: training internals)
+    LocalPlane, _gather_feature_bins, _rank_splits, _safe_mean,
+    chunked_level_scores, fused_level_scores, grow, init_forest,
 )
+from .histograms import class_channels, regression_channels
 from .types import Forest, ForestConfig
-
-
-def init_forest(config: ForestConfig) -> Forest:
-    k, P = config.n_trees, config.max_nodes + 1  # +1 pad slot
-    C = 3 if config.regression else config.n_classes
-    return Forest(
-        feature=jnp.full((k, P), -1, jnp.int32),
-        threshold=jnp.zeros((k, P), jnp.int32),
-        left_child=jnp.full((k, P), -1, jnp.int32),
-        class_counts=jnp.zeros((k, P, C), jnp.float32),
-        value=jnp.zeros((k, P), jnp.float32),
-        tree_weight=jnp.ones((k,), jnp.float32),
-        config=config,
-    )
-
-
-def _safe_mean(counts: jnp.ndarray) -> jnp.ndarray:
-    """Weighted mean ``sum / count`` of [..., C>=2] regression channels,
-    0 when the count is 0.
-
-    ``sum / maximum(count, 1e-38)`` is NOT safe here: 1e-38 is a
-    subnormal float32, which XLA flushes to zero on CPU/TPU, so
-    zero-count slots (every non-split frontier slot writes the pad
-    node) silently became 0/0 = NaN. Harmless to the gather-based
-    predict path (the pad slot is unreachable), but the fused traversal
-    kernel reads every pool row through a one-hot matmul and 0 * NaN
-    poisons the scores.
-    """
-    return jnp.where(
-        counts[..., 0] > 0,
-        counts[..., 1] / jnp.maximum(counts[..., 0], 1e-38),
-        0.0,
-    )
-
-
-def _gather_feature_bins(xb: jnp.ndarray, f: jnp.ndarray) -> jnp.ndarray:
-    """bins[t, i] = xb[i, f[t, i]] as ONE flattened gather.
-
-    Replaces the per-tree ``vmap(take_along_axis)`` that re-materialized
-    a [k, N] int32 gather per call site per level: broadcasting the row
-    index over the tree axis lowers to a single gather of [k, N] pairs.
-    """
-    return xb.astype(jnp.int32)[jnp.arange(xb.shape[0])[None, :], f]
-
-
-def _rank_splits(gain: jnp.ndarray, valid: jnp.ndarray, n_max: int) -> jnp.ndarray:
-    """Beam selection: rank valid slots by gain, admit top n_max.
-
-    Returns split_rank [k, S] int32 in [0, n_max) for admitted slots, -1 else.
-    """
-    score = jnp.where(valid, gain, -jnp.inf)
-    order = jnp.argsort(-score, axis=-1)
-    pos = jnp.argsort(order, axis=-1).astype(jnp.int32)        # rank of each slot
-    admitted = valid & (pos < n_max)
-    return jnp.where(admitted, pos, -1)
-
-
-def fused_level_scores(
-    x_binned: jnp.ndarray,       # [N, F] uint8
-    base_channels: jnp.ndarray,  # [N, C]
-    weights: jnp.ndarray,        # [tc, N]
-    sample_slot: jnp.ndarray,    # [tc, N]
-    feature_mask: Optional[jnp.ndarray],  # [tc, F] bool or None
-    config: ForestConfig,
-):
-    """Fully-fused T_GR -> T_NS: histogram kernel -> split-scan kernel
-    per feature slab; the ``[tc, S, F, B, C]`` histogram never exists in
-    HBM. Peak histogram footprint is one ``[tc, S, W, B, C]`` slab,
-    where ``W = hist_feature_slab(...)`` is the hist kernel's own
-    feature block — so per-slab pallas histograms are bit-identical to
-    slices of the unfused call, and so are the resulting forests.
-
-    The T_NS argmax rides along as the split-scan kernel's running-best
-    carry, threaded through the slab loop; only O(tc*S) descriptors
-    survive. Returns (SplitScores, n_node [tc, S]).
-    """
-    from ..kernels.gain_ratio.kernel import _round_up
-    from ..kernels.split_scan.kernel import init_carry, split_scan_block
-
-    tc = weights.shape[0]
-    N, F = x_binned.shape
-    S, B = config.frontier, config.n_bins
-    C = base_channels.shape[-1]
-    packed = config.packed_hist and not config.regression
-    W = hist_feature_slab(N, F, S, B, C, packed=packed)
-    Fp = _round_up(F, W)
-    xb = jnp.pad(x_binned, ((0, 0), (0, Fp - F)))
-    mask = (
-        feature_mask if feature_mask is not None else jnp.ones((tc, F), jnp.bool_)
-    )
-    mask = jnp.pad(mask, ((0, 0), (0, Fp - F)))   # padded features masked out
-    interpret = jax.default_backend() != "tpu"
-
-    def slab(j, carry):
-        f0 = j * W
-        xb_s = jax.lax.dynamic_slice_in_dim(xb, f0, W, axis=1)
-        mask_s = jax.lax.dynamic_slice_in_dim(mask, f0, W, axis=1)
-        hist = level_histograms(
-            xb_s, base_channels, weights, sample_slot,
-            n_slots=S, n_bins=B, packed=packed, backend=config.hist_backend,
-        )
-        return split_scan_block(
-            hist, mask_s, carry, f0,
-            regression=config.regression, interpret=interpret,
-        )
-
-    carry = jax.lax.fori_loop(0, Fp // W, slab, init_carry(tc, S, C))
-    scores = SplitScores(*carry)
-    return scores, node_counts(scores, regression=config.regression)
-
-
-def chunked_level_scores(
-    x_binned: jnp.ndarray,       # [N, F] uint8 (local shard in distributed mode)
-    base_channels: jnp.ndarray,  # [N, C]
-    weights: jnp.ndarray,        # [k, N]
-    sample_slot: jnp.ndarray,    # [k, N]
-    feature_mask: Optional[jnp.ndarray],  # [k, F] bool or None
-    config: ForestConfig,
-    *,
-    hist_reduce=None,            # optional fn(hist) -> hist (e.g. psum over 'data')
-):
-    """T_GR + T_NS-stage-1 for all k trees, chunked over the tree axis.
-
-    The histogram tensor only ever exists for ``tree_chunk`` trees at a
-    time; only the O(k*S) split descriptors survive the chunk loop.
-    With ``split_backend="pallas"`` on the single-host path
-    (``hist_reduce is None``) the chunk runs ``fused_level_scores`` and
-    the histogram never exists at all beyond one feature slab; the
-    distributed path still combines full feature-shard histograms
-    (psum / psum_scatter) and applies the fused scorer post-combine.
-    Returns (SplitScores [k, S, ...], n_node [k, S]).
-    """
-    k = config.n_trees
-    S = config.frontier
-    tc = config.tree_chunk if config.tree_chunk > 0 else k
-    tc = min(tc, k)
-
-    packed = config.packed_hist and not config.regression
-    split_be = resolve_split_backend(config.split_backend)
-
-    def score_chunk(w_c, slot_c, mask_c):
-        if hist_reduce is None and split_be == "pallas":
-            return fused_level_scores(
-                x_binned, base_channels, w_c, slot_c, mask_c, config
-            )
-        hist = level_histograms(
-            x_binned, base_channels, w_c, slot_c,
-            n_slots=S, n_bins=config.n_bins, packed=packed,
-            backend=config.hist_backend,
-        )
-        if hist_reduce is not None:
-            hist = hist_reduce(hist)     # psum over the sample axis (T_GR combine)
-        return level_scores(
-            hist, mask_c, regression=config.regression, backend=split_be
-        )
-
-    if tc >= k:
-        return score_chunk(weights, sample_slot, feature_mask)
-
-    if k % tc != 0:
-        raise ValueError(f"n_trees={k} must be divisible by tree_chunk={tc}")
-    nc = k // tc
-    # NOTE: the mask's feature dim may be narrower than x_binned's when
-    # the histogram reduce scatters features (psum_scatter path).
-    mask = (
-        feature_mask
-        if feature_mask is not None
-        else jnp.ones((k, x_binned.shape[1]), jnp.bool_)
-    )
-    scores, n_node = jax.lax.map(
-        lambda args: score_chunk(*args),
-        (
-            weights.reshape(nc, tc, -1),
-            sample_slot.reshape(nc, tc, -1),
-            mask.reshape(nc, tc, mask.shape[-1]),
-        ),
-    )
-    scores = jax.tree_util.tree_map(lambda a: a.reshape(k, *a.shape[2:]), scores)
-    return scores, n_node.reshape(k, S)
 
 
 def grow_forest(
@@ -223,101 +43,12 @@ def grow_forest(
 
 @partial(jax.jit, static_argnames=("config",))
 def _grow_forest_impl(x_binned, y, weights, config, feature_mask):
-    N, F = x_binned.shape
-    k, S, B = config.n_trees, config.frontier, config.n_bins
-    depth = config.max_depth
-    n_max = max(S // 2, 1)
-    pad = config.max_nodes          # scatter dump index
-
     base = (
         regression_channels(y)
         if config.regression
         else class_channels(y, config.n_classes)
     )
-
-    forest = init_forest(config)
-    root_counts = jnp.einsum("kn,nc->kc", weights, base)
-    forest = dataclasses.replace(
-        forest, class_counts=forest.class_counts.at[:, 0].set(root_counts)
-    )
-    if config.regression:
-        forest = dataclasses.replace(
-            forest,
-            value=forest.value.at[:, 0].set(_safe_mean(root_counts)),
-        )
-
-    slot_node = jnp.full((k, S), -1, jnp.int32).at[:, 0].set(0)
-    sample_slot = jnp.zeros((k, N), jnp.int32)
-    t_idx = jnp.arange(k)[:, None]
-
-    def level_step(carry, level):
-        forest, slot_node, sample_slot = carry
-
-        scores, n_node = chunked_level_scores(
-            x_binned, base, weights, sample_slot, feature_mask, config
-        )
-
-        active = slot_node >= 0
-        valid = (
-            active
-            & (scores.gain_ratio > config.min_gain)
-            & (n_node >= config.min_samples_split)
-        )
-        split_rank = _rank_splits(scores.gain_ratio, valid, n_max)    # [k, S]
-        is_split = split_rank >= 0
-
-        child_base = 1 + 2 * n_max * level
-        left_id = child_base + 2 * split_rank
-        node_or_pad = jnp.where(is_split, slot_node, pad)
-
-        feature = forest.feature.at[t_idx, node_or_pad].set(
-            jnp.where(is_split, scores.feature, -1)
-        )
-        threshold = forest.threshold.at[t_idx, node_or_pad].set(scores.threshold)
-        left_child = forest.left_child.at[t_idx, node_or_pad].set(left_id)
-
-        lid = jnp.where(is_split, left_id, pad)
-        rid = jnp.where(is_split, left_id + 1, pad)
-        class_counts = forest.class_counts.at[t_idx, lid].set(scores.left_counts)
-        class_counts = class_counts.at[t_idx, rid].set(scores.right_counts)
-        if config.regression:
-            lval = _safe_mean(scores.left_counts)
-            rval = _safe_mean(scores.right_counts)
-            value = forest.value.at[t_idx, lid].set(lval).at[t_idx, rid].set(rval)
-        else:
-            value = forest.value
-
-        forest = dataclasses.replace(
-            forest,
-            feature=feature,
-            threshold=threshold,
-            left_child=left_child,
-            class_counts=class_counts,
-            value=value,
-        )
-
-        # --- route samples to child slots (the paper's "distribute the
-        # data-index list of {v01, v02, ...} to the slaves") -------------
-        live = sample_slot >= 0
-        s_safe = jnp.where(live, sample_slot, 0)
-        rank_i = jnp.take_along_axis(split_rank, s_safe, 1)            # [k, N]
-        f_i = jnp.take_along_axis(scores.feature, s_safe, 1)
-        thr_i = jnp.take_along_axis(scores.threshold, s_safe, 1)
-        bins_i = _gather_feature_bins(x_binned, f_i)                   # [k, N]
-        go_right = (bins_i > thr_i).astype(jnp.int32)
-        new_slot = jnp.where(live & (rank_i >= 0), 2 * rank_i + go_right, -1)
-
-        # --- next level's frontier --------------------------------------
-        j = jnp.arange(S)[None, :]
-        n_children = 2 * is_split.sum(-1, keepdims=True)
-        new_slot_node = jnp.where(j < n_children, child_base + j, -1).astype(jnp.int32)
-
-        return (forest, new_slot_node, new_slot), None
-
-    (forest, _, _), _ = jax.lax.scan(
-        level_step, (forest, slot_node, sample_slot), jnp.arange(depth)
-    )
-    return forest
+    return grow(x_binned, base, weights, config, LocalPlane(feature_mask))
 
 
 # ---------------------------------------------------------------------------

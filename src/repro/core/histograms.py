@@ -29,10 +29,14 @@ The distributed path (core/distributed.py) calls the same function on
 each device's (sample-shard x feature-shard) block and psums over the
 sample axis.
 
-The fused T_GR->T_NS path (core/forest.fused_level_scores and the
+The fused T_GR->T_NS path (core/engine.fused_level_scores and the
 blocked dimension-reduction sweep in core/dimred.py) calls
 ``level_histograms`` on one ``hist_feature_slab``-wide column slice at a
-time, so the full ``[tc, S, F, B, C]`` tensor never reaches HBM.
+time, so the full ``[tc, S, F, B, C]`` tensor never reaches HBM;
+``blocked_level_histograms`` is the sample-axis analogue (a resumable
+accumulation over ``[sample_block, F]`` row blocks, used by
+``ForestConfig.sample_block`` and the out-of-core
+``core.api.grow_forest_streamed`` driver).
 """
 from __future__ import annotations
 
@@ -144,6 +148,64 @@ def level_histograms(
 
     hist = jax.vmap(per_tree)(weights, sample_slot)         # [k, F, S, B, C]
     return jnp.transpose(hist, (0, 2, 1, 3, 4))
+
+
+def blocked_level_histograms(
+    x_binned: jnp.ndarray,      # [N, F] uint8
+    base_channels: jnp.ndarray, # [N, C]
+    weights: jnp.ndarray,       # [k, N]
+    sample_slot: jnp.ndarray,   # [k, N] int32, -1 = parked
+    *,
+    n_slots: int,
+    n_bins: int,
+    sample_block: int,
+    packed: bool = False,
+    backend: str = "auto",
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """``level_histograms`` accumulated over ``[sample_block, F]`` row
+    blocks — the resumable sample-axis carry of the T_GR stage.
+
+    The histogram is a sum over samples, so feeding the kernel one row
+    block at a time and adding the partial tensors is exact whenever the
+    weighted counts are integer-valued (classification with DSI
+    multiplicities — every partial sum stays an exact f32 integer below
+    2**24), and agrees to float rounding for regression channels. The
+    trailing remainder block is padded with parked samples
+    (``slot = -1`` -> the kernels' dump segment), so any ``N`` works.
+
+    Bounds the per-call sample working set to ``sample_block`` rows —
+    the device-side half of the sample-block streaming path
+    (``ForestConfig.sample_block``); the host-side half is
+    ``core.api.grow_forest_streamed``.
+    """
+    N, F = x_binned.shape
+    k = weights.shape[0]
+    C = base_channels.shape[-1]
+    nb = -(-N // sample_block)
+    pad = nb * sample_block - N
+    if pad:
+        x_binned = jnp.pad(x_binned, ((0, pad), (0, 0)))
+        base_channels = jnp.pad(base_channels, ((0, pad), (0, 0)))
+        weights = jnp.pad(weights, ((0, 0), (0, pad)))
+        sample_slot = jnp.pad(
+            sample_slot, ((0, 0), (0, pad)), constant_values=-1
+        )
+
+    def body(i, acc):
+        r0 = i * sample_block
+        h = level_histograms(
+            jax.lax.dynamic_slice_in_dim(x_binned, r0, sample_block, 0),
+            jax.lax.dynamic_slice_in_dim(base_channels, r0, sample_block, 0),
+            jax.lax.dynamic_slice_in_dim(weights, r0, sample_block, 1),
+            jax.lax.dynamic_slice_in_dim(sample_slot, r0, sample_block, 1),
+            n_slots=n_slots, n_bins=n_bins, packed=packed,
+            backend=backend, interpret=interpret,
+        )
+        return acc + h
+
+    init = jnp.zeros((k, n_slots, F, n_bins, C), jnp.float32)
+    return jax.lax.fori_loop(0, nb, body, init)
 
 
 def class_channels(y: jnp.ndarray, n_classes: int) -> jnp.ndarray:

@@ -62,6 +62,24 @@ class ForestConfig:
     soft_voting: bool = False         # Majority[w_i * h_i(x)] (hard) vs prob-weighted
     # --- task-parallel execution knobs (§4.2) ------------------------------
     tree_chunk: int = 0               # trees processed per level-step (0 => all)
+    # Early-exit scheduling (paper §4.2: schedulers only dispatch the
+    # T_GR/T_NS tasks that exist): the growth loop is a ``lax.while_loop``
+    # that stops as soon as every tree's frontier is empty, and trees
+    # whose frontiers died contribute zero-weight (masked) work inside
+    # each tree_chunk task group. Off => fixed ``max_depth`` iterations.
+    # Either way the resulting Forest arrays are bit-identical (the pad
+    # slot is sanitized after growth), so this is purely a scheduling knob.
+    early_exit: bool = True
+    # Sample-block streaming: > 0 => level histograms are accumulated over
+    # [sample_block, F] row blocks instead of one [N, F] pass, bounding
+    # the per-call sample working set (resumable hist carry, mirroring
+    # fused_vote_scores' chunk carry on the predict side). 0 => one pass.
+    # Integer-valued DSI counts make the blocked accumulation bit-exact
+    # for classification; regression channels agree to float rounding.
+    # The host-streaming ``grow_forest_streamed`` path (core/api.py)
+    # feeds blocks of this size from a NumPy/memmap source so the full
+    # [N, F] matrix never has to be device-resident.
+    sample_block: int = 0
     regression: bool = False
     # --- §Perf optimizations (beyond-paper; see EXPERIMENTS.md §Perf) ------
     packed_hist: bool = False         # class index folded into segment ids
@@ -140,10 +158,18 @@ class Forest:
 @_pytree_dataclass
 @dataclasses.dataclass
 class GrowthState:
-    """Mutable state threaded through the level-synchronous growth scan."""
+    """The growth engine's level-loop carry (core/engine.py).
+
+    One value of this pytree fully describes a paused level-synchronous
+    training run: ``core.engine.grow`` threads it through a
+    ``lax.while_loop`` (early-exit scheduling), and the host-streaming
+    driver (``core.api.grow_forest_streamed``) keeps the same fields
+    across its per-block device calls. Registered as a pytree so it
+    round-trips ``jax.jit`` boundaries (see tests/test_engine.py).
+    """
 
     forest: Forest
     slot_node: jnp.ndarray     # [k, S] pool node id of each active frontier slot, -1 idle
     sample_slot: jnp.ndarray   # [k, N] frontier slot of each sample, -1 parked
-    rng: jnp.ndarray           # PRNGKey
-    level: jnp.ndarray         # scalar int32
+    rng: jnp.ndarray           # PRNGKey (reserved for stochastic split policies)
+    level: jnp.ndarray         # scalar int32 — next level to grow

@@ -11,9 +11,29 @@ of real tokens in production.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator, List, Optional, Sequence, Union
 
 import numpy as np
+
+
+def sample_blocks(
+    x: Union[np.ndarray, Sequence[np.ndarray]], block_rows: int = 0
+) -> List[np.ndarray]:
+    """Zero-copy ``[Nb, F]`` row views over a host array / ``np.memmap``.
+
+    The block-feed API of the out-of-core trainer
+    (``repro.core.api.grow_forest_streamed``): an array source is
+    sliced into ``block_rows``-row views (no copy — memmap blocks are
+    only paged in when a block is fed to the device), and an explicit
+    sequence of blocks passes through unchanged, so callers can stream
+    from any host source that yields row blocks. ``block_rows <= 0``
+    means one block (the degenerate resident feed).
+    """
+    if isinstance(x, (list, tuple)):
+        return [np.asarray(b) for b in x]
+    src = np.asarray(x)
+    nb = block_rows if block_rows > 0 else src.shape[0]
+    return [src[i:i + nb] for i in range(0, src.shape[0], nb)]
 
 
 @dataclasses.dataclass
