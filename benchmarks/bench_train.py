@@ -3,14 +3,21 @@
 ``train_e2e_resident`` times the unified engine's jitted
 ``grow_forest`` (early-exit while_loop, whole dataset device-resident);
 ``train_e2e_streamed`` the host-streaming ``grow_forest_streamed``
-driver on the same data split into 4 sample blocks (includes the
-host<->device block feed, the out-of-core price); ``train_early_exit``
-a cleanly-separable dataset under a generous depth budget (trees
-purify and their frontiers die at ~1/4 of ``max_depth`` — the
-realistic over-budgeted case), with the fixed-depth time of the
-bit-identical forest in ``fixed_depth_us`` — the level-count saving
-the early-exit scheduler buys. Rows land in BENCH_kernels.json next to
-the kernel series (see PERF.md).
+driver on the same data split into 4 sample blocks with the
+synchronous feed (``prefetch=0`` — the fused route+hist pass reads
+each block once per level, but block copies still serialize with
+compute); ``train_e2e_streamed_prefetch`` the full async data plane
+(``prefetch=2``: a ``BlockFeeder`` thread keeps the next block's
+host->device copy in flight while the current block's histogram
+runs). ``oob_streamed`` times the blocked Eq. 8 OOB sweep against the
+resident call (``resident_us``). ``train_early_exit`` times a
+cleanly-separable dataset under a generous depth budget (trees purify
+and their frontiers die at ~1/4 of ``max_depth`` — the realistic
+over-budgeted case), with the fixed-depth time of the bit-identical
+forest in ``fixed_depth_us`` — the level-count saving the early-exit
+scheduler buys. Rows land in BENCH_kernels.json next to the kernel
+series (see PERF.md); CI fails the kernels-bench job if the streamed
+rows go missing.
 """
 import dataclasses
 import time
@@ -24,6 +31,7 @@ from repro.core.binning import bin_dataset
 from repro.core.dsi import bootstrap_counts
 from repro.core.forest import grow_forest
 from repro.core.types import ForestConfig
+from repro.core.voting import oob_accuracy, oob_accuracy_streamed
 from repro.data.tabular import make_classification
 
 K, N, F, B, C, DEPTH = 8, 4096, 32, 16, 3, 6
@@ -68,8 +76,30 @@ def run():
     blocks = np.array_split(xb, N_BLOCKS)
     rows.append({
         "bench": "train_e2e_streamed",
-        "us_per_call": _time(lambda: grow_forest_streamed(blocks, y, w, cfg)),
+        "us_per_call": _time(
+            lambda: grow_forest_streamed(blocks, y, w, cfg, prefetch=0)
+        ),
+        "derived": f"{SHAPE},blocks={N_BLOCKS},fused_route_hist,sync_feed",
+    })
+    rows.append({
+        "bench": "train_e2e_streamed_prefetch",
+        "us_per_call": _time(
+            lambda: grow_forest_streamed(blocks, y, w, cfg, prefetch=2)
+        ),
+        "derived": f"{SHAPE},blocks={N_BLOCKS},fused_route_hist,prefetch=2",
+    })
+
+    forest = grow_forest(xb_dev, y_dev, w_dev, cfg)
+    us_oob_res = _time(
+        lambda: oob_accuracy(forest, xb_dev, y_dev, w_dev)
+    )
+    rows.append({
+        "bench": "oob_streamed",
+        "us_per_call": _time(
+            lambda: oob_accuracy_streamed(forest, blocks, y, w)
+        ),
         "derived": f"{SHAPE},blocks={N_BLOCKS}",
+        "resident_us": us_oob_res,
     })
 
     # Over-budgeted depth on separable data: trees purify and every

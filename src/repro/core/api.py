@@ -19,19 +19,22 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .binning import bin_dataset, apply_bins
-from .dimred import dimension_reduction, random_feature_mask
+from .binning import bin_dataset, apply_bins, fit_bins
+from .dimred import (
+    dimension_reduction, dimension_reduction_streamed, random_feature_mask,
+)
 from .dsi import bootstrap_counts
 from .engine import (
     LocalPlane, _safe_mean, finalize_forest, init_forest, next_frontier,
-    plan_level, route_level, write_level,
+    plan_level, stream_block_step, write_level,
 )
 from .forest import grow_forest
 from .gain import level_scores, resolve_split_backend
-from .histograms import class_channels, level_histograms, regression_channels
+from .histograms import class_channels, regression_channels
 from .types import Forest, ForestConfig
 from .voting import (
-    oob_accuracy, oob_r2, predict, predict_regression, predict_scores,
+    oob_accuracy, oob_accuracy_streamed, oob_r2, oob_r2_streamed, predict,
+    predict_regression, predict_scores,
 )
 
 
@@ -51,9 +54,34 @@ class PRFModel:
     forest: Forest
     bin_edges: np.ndarray
 
+    def _streams(self, x: np.ndarray) -> bool:
+        """Out-of-core models (``config.sample_block > 0``) also predict
+        per sample block — prediction is per-sample, so the blocked
+        sweep is bit-identical to the resident call."""
+        nb = self.forest.config.sample_block
+        return nb > 0 and x.shape[0] > nb
+
+    def _predict_blocks(self, x: np.ndarray, fn) -> np.ndarray:
+        """Bin + evaluate one ``sample_block`` at a time: each binned
+        block is consumed by ``fn`` before the next is built, so the
+        full ``[N, F]`` matrix never becomes device-resident — only the
+        per-sample outputs survive the sweep."""
+        edges = jnp.asarray(self.bin_edges)
+        nb = self.forest.config.sample_block
+        return np.concatenate([
+            np.asarray(
+                fn(apply_bins(jnp.asarray(np.asarray(x[i:i + nb])), edges))
+            )
+            for i in range(0, x.shape[0], nb)
+        ])
+
     def predict(self, x: np.ndarray) -> np.ndarray:
-        xb = apply_bins(jnp.asarray(x), jnp.asarray(self.bin_edges))
-        if self.forest.config.regression:
+        regression = self.forest.config.regression
+        if self._streams(x):
+            fn = predict_regression if regression else predict
+            return self._predict_blocks(x, partial(fn, self.forest))
+        xb = apply_bins(jnp.asarray(np.asarray(x)), jnp.asarray(self.bin_edges))
+        if regression:
             return np.asarray(predict_regression(self.forest, xb))
         return np.asarray(predict(self.forest, xb))
 
@@ -64,7 +92,9 @@ class PRFModel:
                 "predict_scores is classification-only; use predict() for "
                 "regression models"
             )
-        xb = apply_bins(jnp.asarray(x), jnp.asarray(self.bin_edges))
+        if self._streams(x):
+            return self._predict_blocks(x, partial(predict_scores, self.forest))
+        xb = apply_bins(jnp.asarray(np.asarray(x)), jnp.asarray(self.bin_edges))
         return np.asarray(predict_scores(self.forest, xb))
 
     def accuracy(self, x: np.ndarray, y: np.ndarray) -> float:
@@ -85,8 +115,19 @@ def train_prf(
     config: ForestConfig,
     seed: int = 0,
 ) -> PRFModel:
-    """End-to-end PRF training on host data (paper §3 + §4 semantics)."""
+    """End-to-end PRF training on host data (paper §3 + §4 semantics).
+
+    With ``config.sample_block > 0`` the whole pipeline — binning, DSI
+    bootstrap, dimension reduction, growth, OOB weights — runs through
+    the streaming data plane (``grow_forest_streamed`` and the blocked
+    OOB/dimred carriers): ``x`` may be an ``np.memmap`` far larger than
+    device memory, the full ``[N, F]`` matrix is never device-resident,
+    and the resulting model is bit-identical to the resident path for
+    classification (regression channels agree to float rounding).
+    """
     config = config.resolved(x.shape[1])
+    if config.sample_block > 0:
+        return _train_prf_streamed(x, y, config, seed)
     xb_np, edges = bin_dataset(x, config.n_bins)
     xb = jnp.asarray(xb_np)
     y = jnp.asarray(y)
@@ -121,7 +162,7 @@ def train_prf(
 
 
 # ---------------------------------------------------------------------------
-# Host-streaming out-of-core growth (sample-block streaming)
+# Host-streaming out-of-core training (the streaming data plane)
 # ---------------------------------------------------------------------------
 
 
@@ -131,6 +172,61 @@ def _channels(y: jnp.ndarray, config: ForestConfig) -> jnp.ndarray:
         if config.regression
         else class_channels(y, config.n_classes)
     )
+
+
+def _train_prf_streamed(
+    x: np.ndarray, y: np.ndarray, config: ForestConfig, seed: int
+) -> PRFModel:
+    """``train_prf`` over the streaming data plane (never re-validates
+    shapes against a device-resident ``[N, F]`` matrix — there is none).
+
+    Binning edges are the one full-data pass left, and it is host-side
+    (``np.quantile`` over the raw source; a memmap pages through host
+    RAM, nothing reaches a device). Everything downstream — the binned
+    blocks, dimension reduction, growth, OOB weights, and the model's
+    own predictions — moves per ``sample_block`` rows.
+    """
+    nb = config.sample_block
+    N = x.shape[0]
+    edges = fit_bins(x, config.n_bins)
+    edges_dev = jnp.asarray(edges)
+    # Binned uint8 blocks stay HOST-resident (4-8x smaller than the raw
+    # floats); each level sweep feeds them to the device one at a time.
+    xb_blocks = [
+        np.asarray(apply_bins(jnp.asarray(np.asarray(x[i:i + nb])), edges_dev))
+        for i in range(0, N, nb)
+    ]
+    y = jnp.asarray(y)
+    key = jax.random.PRNGKey(seed)
+    k_boot, k_dim = jax.random.split(key)
+
+    weights = bootstrap_counts(k_boot, config.n_trees, N)          # DSI §4.1.2
+
+    feature_mask = None
+    if config.feature_mode == "importance" and not config.regression:
+        feature_mask = dimension_reduction_streamed(                   # §3.2
+            xb_blocks, y, weights, config, k_dim
+        )
+    elif config.feature_mode == "random":
+        feature_mask = random_feature_mask(
+            k_dim, n_trees=config.n_trees, n_features=x.shape[1],
+            n_selected=config.n_selected,
+        )                                                              # §3.1 RF
+
+    y = y if not config.regression else y.astype(jnp.float32)
+    forest = grow_forest_streamed(
+        xb_blocks, y, weights, config, feature_mask
+    )                                                                  # §4.2
+
+    if config.weighted_voting:                                         # §3.3
+        w = (
+            oob_r2_streamed(forest, xb_blocks, y.astype(jnp.float32), weights)
+            if config.regression
+            else oob_accuracy_streamed(forest, xb_blocks, y, weights)
+        )
+        forest = dataclasses.replace(forest, tree_weight=w)
+
+    return PRFModel(forest=forest, bin_edges=edges)
 
 
 @partial(jax.jit, static_argnames=("config",))
@@ -150,20 +246,18 @@ def _stream_init(level0_hist, config):
     return forest
 
 
-@partial(jax.jit, static_argnames=("config",))
-def _stream_hist(hist_acc, xb_b, y_b, w_b, slot_b, slot_node, config):
-    """Fold one sample block into the level histogram carry — the host
-    side of the resumable T_GR accumulation. Trees whose frontiers died
-    contribute zero-weight (masked) work, exactly as in the engine."""
-    tree_live = jnp.any(slot_node >= 0, axis=1)
-    w_lvl = w_b * tree_live[:, None].astype(w_b.dtype)
-    h = level_histograms(
-        xb_b, _channels(y_b, config), w_lvl, slot_b,
-        n_slots=config.frontier, n_bins=config.n_bins,
-        packed=config.packed_hist and not config.regression,
-        backend=config.hist_backend,
+@partial(jax.jit, static_argnames=("config", "route"))
+def _stream_block_step(
+    hist_acc, xb_b, base_b, w_b, slot_b, slot_node, split_rank, scores,
+    config, route,
+):
+    """The fused route+histogram pass for one block on the local plane —
+    see ``engine.stream_block_step``. ONE jitted call, ONE read of the
+    block per level."""
+    return stream_block_step(
+        hist_acc, xb_b, base_b, w_b, slot_b, slot_node, split_rank, scores,
+        config, LocalPlane(), route=route,
     )
-    return hist_acc + h
 
 
 @partial(jax.jit, static_argnames=("config",))
@@ -184,9 +278,23 @@ def _stream_plan_write(forest, slot_node, hist, feature_mask, level, config):
     return forest, scores, split_rank, new_slot_node
 
 
-@jax.jit
-def _stream_route(xb_b, slot_b, split_rank, scores):
-    return route_level(xb_b, slot_b, split_rank, scores, LocalPlane())
+def _stream_setup(x_binned, y, weights, config: ForestConfig, prefetch: int):
+    """Shared host-side setup of the streaming growth drivers: validated
+    block list and a ``BlockFeeder`` over the blocks."""
+    from ..data.pipeline import BlockFeeder, stream_blocks
+
+    y_np = np.asarray(y)
+    w_np = np.asarray(weights, dtype=np.float32)
+    blocks = stream_blocks(
+        x_binned, config.sample_block, what="grow_forest_streamed",
+        n_y=y_np.shape[0], n_w=w_np.shape[1],
+    )
+    sizes = [b.shape[0] for b in blocks]
+    offsets = np.concatenate([[0], np.cumsum(sizes)])
+    if config.regression:
+        y_np = y_np.astype(np.float32)
+    feeder = BlockFeeder(blocks, prefetch=prefetch)
+    return feeder, y_np, w_np, sizes, offsets
 
 
 def grow_forest_streamed(
@@ -195,97 +303,98 @@ def grow_forest_streamed(
     weights: np.ndarray,
     config: ForestConfig,
     feature_mask: Optional[np.ndarray] = None,
+    *,
+    prefetch: int = 2,
 ) -> Forest:
-    """Out-of-core ``grow_forest``: train from host-resident sample blocks.
+    """Out-of-core ``grow_forest`` over the async streaming data plane.
 
     ``x_binned`` is either a host array / ``np.memmap`` of binned
     features ``[N, F]`` (sliced into ``config.sample_block``-row views —
     no copy; ``sample_block > 0`` is required so the full matrix can
     never silently become one device block) or an explicit sequence of
-    ``[Nb, F]`` blocks. Each device call only ever sees one block: per
-    level, one pass accumulates the ``[k, S, F, B, C]`` level histogram
-    block by block (the resumable T_GR carry), one jitted call scores +
-    writes the level with the engine's shared ``plan_level`` /
-    ``write_level`` / ``next_frontier`` pieces, and a second pass routes
-    each block's samples to their child slots. Root class counts come
-    for free from the level-0 histogram (every sample sits in slot 0),
-    so each level reads the data exactly once for histograms. The
-    per-sample frontier table stays host-resident, so device memory
-    holds O(sample_block * F + k*S*F*B*C) — independent of N.
+    ``[Nb, F]`` blocks.
+
+    Data-plane accounting (each device call only ever sees one block):
+
+    * **one read per level** — per block per level, ONE jitted call
+      (``engine.stream_block_step``) routes the block's samples from
+      the previous level's frontier and immediately folds them into
+      this level's histogram carry, so the route and histogram passes
+      share a single host->device feed of the block;
+    * **async double-buffering** — a ``BlockFeeder`` thread keeps
+      ``prefetch`` block copies in flight, so block ``i+1``'s
+      host->device transfer overlaps block ``i``'s histogram
+      (``prefetch=0`` restores the synchronous feed);
+    * **pinned per-block constants** — label channels and DSI weights
+      are uploaded once for the whole growth, not once per level, and
+      the per-sample slot table stays device-resident across levels
+      (no host round-trip per block per level).
+
+    Per level, one jitted call then scores + writes the level with the
+    engine's shared ``plan_level`` / ``write_level`` / ``next_frontier``
+    pieces. Root class counts come for free from the level-0 histogram
+    (every sample sits in slot 0). Device memory: the ``[N, F]`` bin
+    matrix — the dominant term for realistic F — is never resident
+    (one ``sample_block * F`` block at a time, plus the
+    ``k*S*F*B*C`` histogram carry), but the pinned weight/channel/slot
+    operands DO scale with N: ``(2k + C) * N`` f32/int32 words stay on
+    device for the whole growth (the price of feeding them zero times
+    per level instead of twice). With k trees per host ≪ F features
+    that is a small fraction of the streamed data; for very large
+    ensembles, shard trees across hosts before streaming.
 
     DSI counts are integer-valued, so the blocked accumulation is
     bit-exact for classification: the result equals the resident
     ``grow_forest`` forest array for array (tests/test_engine.py pins
-    this across >= 4 blocks). Regression channels agree to float
-    rounding. Host-side early exit stops the level loop as soon as
-    every tree's frontier is empty (always on — the loop is host-driven
-    and the forests are identical either way; ``config.early_exit``
-    only gates the device-side ``lax.while_loop``).
+    this across >= 4 blocks, with and without prefetch). Regression
+    channels agree to float rounding. Host-side early exit stops the
+    level loop as soon as every tree's frontier is empty (always on —
+    the loop is host-driven and the forests are identical either way;
+    ``config.early_exit`` only gates the device-side ``lax.while_loop``).
     """
-    from ..data.pipeline import sample_blocks
-
-    y_np = np.asarray(y)
-    w_np = np.asarray(weights, dtype=np.float32)
-    if not isinstance(x_binned, (list, tuple)) and config.sample_block <= 0:
-        raise ValueError(
-            "grow_forest_streamed with an array/memmap source needs "
-            "config.sample_block > 0 — sample_block=0 would feed the whole "
-            "[N, F] matrix as one device block, which is exactly what this "
-            "path exists to avoid (pass an explicit block list to stream "
-            "from a custom source)"
-        )
-    blocks = sample_blocks(x_binned, config.sample_block)
-    sizes = [b.shape[0] for b in blocks]
-    offsets = np.concatenate([[0], np.cumsum(sizes)])
-    if offsets[-1] != y_np.shape[0] or offsets[-1] != w_np.shape[1]:
-        raise ValueError(
-            f"blocks cover {offsets[-1]} samples, but y has {y_np.shape[0]} "
-            f"and weights {w_np.shape[1]}"
-        )
-    if config.regression:
-        y_np = y_np.astype(np.float32)
+    feeder, y_np, w_np, sizes, offsets = _stream_setup(
+        x_binned, y, weights, config, prefetch
+    )
 
     k, S = config.n_trees, config.frontier
-    F = blocks[0].shape[1]
+    F = feeder.blocks[0].shape[1]
     B = config.n_bins
     C = 3 if config.regression else config.n_classes
     mask_dev = None if feature_mask is None else jnp.asarray(feature_mask)
 
-    def block_args(i):
+    # Per-block constants: pinned on device ONCE for the whole growth.
+    base_dev, w_dev = [], []
+    for i in range(len(feeder)):
         o0, o1 = offsets[i], offsets[i + 1]
-        return jnp.asarray(blocks[i]), jnp.asarray(y_np[o0:o1]), \
-            jnp.asarray(w_np[:, o0:o1])
+        base_dev.append(_channels(feeder.pin(y_np[o0:o1]), config))
+        w_dev.append(feeder.pin(w_np[:, o0:o1]))
+    # The per-sample frontier table: device-resident across all levels.
+    slot_dev = [jnp.zeros((k, n), jnp.int32) for n in sizes]
 
     slot_node = jnp.full((k, S), -1, jnp.int32).at[:, 0].set(0)
-    slot_blocks = [np.zeros((k, n), np.int32) for n in sizes]
+    forest, scores, split_rank = None, None, None
 
-    def level_hist():
+    def level_sweep(route: bool):
         hist = jnp.zeros((k, S, F, B, C), jnp.float32)
-        for i in range(len(blocks)):
-            xb_b, y_b, w_b = block_args(i)
-            hist = _stream_hist(
-                hist, xb_b, y_b, w_b, jnp.asarray(slot_blocks[i]),
-                slot_node, config,
+        for i, xb_b in enumerate(feeder.sweep()):
+            hist, slot_dev[i] = _stream_block_step(
+                hist, xb_b, base_dev[i], w_dev[i], slot_dev[i], slot_node,
+                split_rank if route else None, scores if route else None,
+                config, route,
             )
         return hist
 
-    forest = None
     for level in range(config.max_depth):
         if not np.any(np.asarray(slot_node) >= 0):
             break                                   # every frontier is empty
-        hist = level_hist()
+        hist = level_sweep(route=level > 0)
         if forest is None:
             forest = _stream_init(hist, config)     # root node, free at level 0
         forest, scores, split_rank, slot_node = _stream_plan_write(
             forest, slot_node, hist, mask_dev, jnp.asarray(level, jnp.int32),
             config,
         )
-        for i in range(len(blocks)):
-            slot_blocks[i] = np.asarray(_stream_route(
-                jnp.asarray(blocks[i]), jnp.asarray(slot_blocks[i]),
-                split_rank, scores,
-            ))
 
     if forest is None:              # max_depth == 0: root node only
-        forest = _stream_init(level_hist(), config)
+        forest = _stream_init(level_sweep(route=False), config)
     return finalize_forest(forest)

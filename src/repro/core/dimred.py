@@ -18,6 +18,7 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .gain import multiway_gain_ratio, variable_importance
 from .histograms import class_channels, hist_feature_slab, level_histograms
@@ -103,6 +104,63 @@ def dimension_reduction(
     """Full Alg. 3.1. Returns per-tree feature mask [k, F]."""
     cfg = config.resolved(x_binned.shape[1])
     gr = root_gain_ratios(x_binned, y, weights, cfg)
+    return select_features(
+        gr, rng, n_selected=cfg.n_selected, n_important=cfg.n_important
+    )
+
+
+@partial(jax.jit, static_argnames=("n_bins", "backend"))
+def _root_hist_block(hist_acc, xb_b, base_b, w_b, *, n_bins, backend):
+    slot0 = jnp.zeros_like(w_b, dtype=jnp.int32)
+    return hist_acc + level_histograms(
+        xb_b, base_b, w_b, slot0, n_slots=1, n_bins=n_bins, backend=backend,
+    )
+
+
+def dimension_reduction_streamed(
+    x_binned,
+    y: jnp.ndarray,
+    weights: jnp.ndarray,
+    config: ForestConfig,
+    rng: jax.Array,
+    *,
+    prefetch: int = 2,
+) -> jnp.ndarray:
+    """Alg. 3.1 over host sample blocks (the streaming data plane).
+
+    The root histogram is a sum over samples, so it accumulates block by
+    block exactly like the growth histograms — DSI counts are integer-
+    valued, the accumulation is bit-exact, and the resulting mask equals
+    the resident ``dimension_reduction`` mask bitwise (the gain ratio is
+    per-feature, so full-F scoring of the accumulated histogram matches
+    the resident slab sweep). The sweep's own working set is one block,
+    its [k, Nb] weight slice, and the [k, 1, F, B, C] root histogram —
+    the [N, F] matrix is never device-resident (the caller's [k, N]
+    DSI weights are, as everywhere on the streaming plane).
+    """
+    from ..data.pipeline import BlockFeeder, stream_blocks
+
+    y_np = np.asarray(y)
+    w_np = np.asarray(weights, dtype=np.float32)
+    blocks = stream_blocks(
+        x_binned, config.sample_block, what="dimension_reduction_streamed",
+        n_y=y_np.shape[0], n_w=w_np.shape[1],
+    )
+    feeder = BlockFeeder(blocks, prefetch=prefetch)
+    F = feeder.blocks[0].shape[1]
+    cfg = config.resolved(F)
+    k = weights.shape[0]
+    hist = jnp.zeros((k, 1, F, cfg.n_bins, cfg.n_classes), jnp.float32)
+    o = 0
+    for xb_b in feeder.sweep():
+        n = xb_b.shape[0]
+        base_b = class_channels(feeder.pin(y_np[o:o + n]), cfg.n_classes)
+        hist = _root_hist_block(
+            hist, xb_b, base_b, feeder.pin(w_np[:, o:o + n]),
+            n_bins=cfg.n_bins, backend=cfg.hist_backend,
+        )
+        o += n
+    gr = multiway_gain_ratio(hist[:, 0])                 # [k, F]
     return select_features(
         gr, rng, n_selected=cfg.n_selected, n_important=cfg.n_important
     )

@@ -38,6 +38,7 @@ from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
@@ -54,8 +55,13 @@ def _shard_map(f, *, mesh, in_specs, out_specs):
               check_rep=False)
 
 from .dsi import bootstrap_counts
-from .engine import CollectivePlane, _gather_feature_bins, grow
-from .gain import SplitScores, multiway_gain_ratio
+from .engine import (
+    CollectivePlane, _gather_feature_bins, _safe_mean, finalize_forest, grow,
+    init_forest, next_frontier, plan_level, stream_block_step, write_level,
+)
+from .gain import (
+    SplitScores, level_scores, multiway_gain_ratio, resolve_split_backend,
+)
 from .histograms import class_channels, level_histograms, regression_channels
 from .types import Forest, ForestConfig
 
@@ -201,6 +207,358 @@ def _grow_sharded(
     return grow(xb_loc, base_loc, w_loc, config, plane)
 
 
+# ---------------------------------------------------------------------------
+# Mesh x streaming: host sample blocks fed into the collective plane
+# ---------------------------------------------------------------------------
+
+
+def _pad_rows(a: np.ndarray, pad: int, fill=0):
+    if pad == 0:
+        return np.ascontiguousarray(a)
+    width = [(0, pad)] + [(0, 0)] * (a.ndim - 1)
+    return np.pad(a, width, constant_values=fill)
+
+
+
+
+def grow_forest_streamed_sharded(
+    x_binned,
+    y: np.ndarray,
+    weights: np.ndarray,
+    config: ForestConfig,
+    mesh: Mesh,
+    feature_mask: Optional[np.ndarray] = None,
+    *,
+    sample_axes: Sequence[str] = ("data",),
+    feature_axis: str = "model",
+    prefetch: int = 2,
+) -> Forest:
+    """Out-of-core growth on the **mesh** plane — the streaming data
+    plane composed with ``MeshPlane``'s collectives, lifting the
+    per-host memory cap on the distributed path too.
+
+    Per (block, level), ONE jitted ``shard_map`` call runs
+    ``engine.stream_block_step`` on every device: each shard routes its
+    (sample x feature) slice of the block (the winning feature's
+    go-right bit broadcast by ``MeshPlane.broadcast_route``'s masked
+    psum) and folds it into its **local** histogram partial — the
+    ``combine_hist`` collective (psum or psum_scatter, per
+    ``config.hist_reduce``) runs once per level in the plan step, not
+    once per block, so streaming adds zero extra collective traffic.
+    The per-shard partials live in a ``[D, k, S, F, B, C]`` carry
+    sharded ``P(sample_axes, ..., feature_axis)`` (each data shard owns
+    its row), and the per-sample slot table stays device-resident
+    sharded ``P(None, sample_axes)``.
+
+    Blocks are padded host-side to a multiple of the data-axis size
+    with parked samples (``slot = -1``, zero weight) — invisible to
+    histograms, routing, and root counts — so any block split shards.
+    The result is bit-identical to resident ``_grow_sharded`` growth
+    and to the local planes (the engine parity matrix).
+    """
+    from .api import _stream_setup
+
+    sample_axes = tuple(sample_axes)
+    feeder0, y_np, w_np, sizes, offsets = _stream_setup(
+        x_binned, y, weights, config, prefetch
+    )
+    D = int(np.prod([mesh.shape[a] for a in sample_axes]))
+    k, S = config.n_trees, config.frontier
+    F = feeder0.blocks[0].shape[1]
+    B = config.n_bins
+    C = 3 if config.regression else config.n_classes
+
+    x_sh = NamedSharding(mesh, P(sample_axes, feature_axis))
+    row_sh = NamedSharding(mesh, P(sample_axes))
+    kn_sh = NamedSharding(mesh, P(None, sample_axes))
+    rep_sh = NamedSharding(mesh, P())
+    hist_spec = P(sample_axes, None, None, feature_axis)
+
+    from ..data.pipeline import BlockFeeder
+
+    pads = [(-n) % D for n in sizes]
+    feeder = BlockFeeder(
+        [_pad_rows(b, p) for b, p in zip(feeder0.blocks, pads)],
+        placement=x_sh, prefetch=prefetch,
+    )
+
+    from .api import _channels
+
+    base_dev, w_dev, slot_dev = [], [], []
+    for i, p in enumerate(pads):
+        o0, o1 = offsets[i], offsets[i + 1]
+        # Channels built on device by the same _channels every other
+        # plane uses; pad rows are zero-weight + parked, so their
+        # channel content is irrelevant.
+        base_dev.append(_channels(
+            jax.device_put(_pad_rows(y_np[o0:o1], p), row_sh), config,
+        ))
+        w_dev.append(jax.device_put(_pad_rows(w_np[:, o0:o1].T, p).T, kn_sh))
+        slot0 = np.zeros((k, sizes[i] + p), np.int32)
+        slot0[:, sizes[i]:] = -1                    # pad rows stay parked
+        slot_dev.append(jax.device_put(slot0, kn_sh))
+
+    mask_np = (
+        np.ones((k, F), bool) if feature_mask is None
+        else np.asarray(feature_mask, bool)
+    )
+    mask_dev = jax.device_put(mask_np, NamedSharding(mesh, P(None, feature_axis)))
+
+    def make_plane(Fl, mask_loc=None):
+        return MeshPlane(
+            config, Fl, mask_loc,
+            sample_axes=sample_axes, feature_axis=feature_axis,
+        )
+
+    def step_kernel_route(hist_part, xb_loc, base_loc, w_loc, slot_loc,
+                          slot_node, split_rank, scores):
+        h, slot_loc = stream_block_step(
+            hist_part[0], xb_loc, base_loc, w_loc, slot_loc, slot_node,
+            split_rank, scores, config, make_plane(xb_loc.shape[1]),
+            route=True,
+        )
+        return h[None], slot_loc
+
+    def step_kernel_first(hist_part, xb_loc, base_loc, w_loc, slot_loc,
+                          slot_node):
+        h, slot_loc = stream_block_step(
+            hist_part[0], xb_loc, base_loc, w_loc, slot_loc, slot_node,
+            None, None, config, make_plane(xb_loc.shape[1]), route=False,
+        )
+        return h[None], slot_loc
+
+    data_specs = (hist_spec, P(sample_axes, feature_axis), P(sample_axes),
+                  P(None, sample_axes), P(None, sample_axes), P())
+    step_route = jax.jit(_shard_map(
+        step_kernel_route, mesh=mesh,
+        in_specs=data_specs + (P(), P()),
+        out_specs=(hist_spec, P(None, sample_axes)),
+    ))
+    step_first = jax.jit(_shard_map(
+        step_kernel_first, mesh=mesh,
+        in_specs=data_specs,
+        out_specs=(hist_spec, P(None, sample_axes)),
+    ))
+
+    split_be = resolve_split_backend(config.split_backend)
+
+    def make_plan(init: bool):
+        def plan_kernel(hist_part, forest, slot_node, level, mask_loc):
+            plane = make_plane(hist_part.shape[3], mask_loc)
+            hist_c = plane.combine_hist(hist_part[0])
+            if init:
+                # Root counts: any feature's bin marginal of the level-0
+                # histogram (slot 0) sums to the [k, C] root class counts
+                # (identical on every shard — exact integer sums).
+                root = hist_c[:, 0, 0].sum(axis=1)
+                forest = dataclasses.replace(
+                    forest,
+                    class_counts=forest.class_counts.at[:, 0].set(root),
+                )
+                if config.regression:
+                    forest = dataclasses.replace(
+                        forest,
+                        value=forest.value.at[:, 0].set(_safe_mean(root)),
+                    )
+            scores_loc, n_loc = level_scores(
+                hist_c, plane.level_mask, regression=config.regression,
+                backend=split_be,
+            )
+            scores, n_node = plane.merge_winners(scores_loc, n_loc)
+            split_rank, is_split, child_base = plan_level(
+                scores, n_node, slot_node, config, level
+            )
+            forest = write_level(
+                forest, slot_node, split_rank, is_split, child_base, scores,
+                config,
+            )
+            return (
+                forest, scores, split_rank,
+                next_frontier(is_split, child_base, config.frontier),
+            )
+
+        return jax.jit(_shard_map(
+            plan_kernel, mesh=mesh,
+            in_specs=(hist_spec, P(), P(), P(), P(None, feature_axis)),
+            out_specs=(P(), P(), P(), P()),
+        ))
+
+    plan_init, plan_next = make_plan(True), make_plan(False)
+
+    hist0 = jax.device_put(
+        jnp.zeros((D, k, S, F, B, C), jnp.float32),
+        NamedSharding(mesh, hist_spec),
+    )
+    slot_node = jax.device_put(
+        jnp.full((k, S), -1, jnp.int32).at[:, 0].set(0), rep_sh
+    )
+    forest, scores, split_rank = None, None, None
+
+    def level_sweep(route: bool):
+        hist = hist0
+        for i, xb_b in enumerate(feeder.sweep()):
+            if route:
+                hist, slot_dev[i] = step_route(
+                    hist, xb_b, base_dev[i], w_dev[i], slot_dev[i],
+                    slot_node, split_rank, scores,
+                )
+            else:
+                hist, slot_dev[i] = step_first(
+                    hist, xb_b, base_dev[i], w_dev[i], slot_dev[i], slot_node,
+                )
+        return hist
+
+    for level in range(config.max_depth):
+        if not np.any(np.asarray(slot_node) >= 0):
+            break
+        hist = level_sweep(route=level > 0)
+        plan = plan_next if forest is not None else plan_init
+        if forest is None:
+            forest = jax.device_put(init_forest(config), rep_sh)
+        forest, scores, split_rank, slot_node = plan(
+            hist, forest, slot_node, jnp.asarray(level, jnp.int32), mask_dev,
+        )
+
+    if forest is None:              # max_depth == 0: root node only
+        def root_kernel(hist_part):
+            plane = make_plane(hist_part.shape[3])
+            hist_c = plane.combine_hist(hist_part[0])
+            return hist_c[:, 0, 0].sum(axis=1)
+
+        root_fn = jax.jit(_shard_map(
+            root_kernel, mesh=mesh, in_specs=(hist_spec,), out_specs=P(),
+        ))
+        root = root_fn(level_sweep(route=False))
+        forest = init_forest(config)
+        forest = dataclasses.replace(
+            forest, class_counts=forest.class_counts.at[:, 0].set(root)
+        )
+        if config.regression:
+            forest = dataclasses.replace(
+                forest, value=forest.value.at[:, 0].set(_safe_mean(root))
+            )
+    return finalize_forest(forest)
+
+
+def oob_accuracy_streamed_sharded(
+    forest: Forest,
+    x_binned,
+    y: np.ndarray,
+    weights: np.ndarray,
+    mesh: Mesh,
+    *,
+    sample_block: int = 0,
+    sample_axes: Sequence[str] = ("data",),
+    feature_axis: str = "model",
+    prefetch: int = 2,
+) -> jnp.ndarray:
+    """Eq. (8) over host sample blocks on the mesh — per block, each
+    shard routes its slice and psums its [k] correct/OOB partial counts;
+    the counts accumulate across blocks (exact f32 integers, so the
+    result is bit-identical to resident ``_oob_weights_sharded`` /
+    single-host ``oob_accuracy``). Padded rows are masked via an
+    explicit validity channel (their zero weight would otherwise read
+    as OOB)."""
+    from ..data.pipeline import BlockFeeder, stream_blocks
+
+    sample_axes = tuple(sample_axes)
+    y_np = np.asarray(y)
+    w_np = np.asarray(weights, dtype=np.float32)
+    blocks = stream_blocks(
+        x_binned, sample_block, what="oob_accuracy_streamed_sharded",
+        n_y=y_np.shape[0], n_w=w_np.shape[1],
+    )
+    sizes = [b.shape[0] for b in blocks]
+    offsets = np.concatenate([[0], np.cumsum(sizes)])
+    D = int(np.prod([mesh.shape[a] for a in sample_axes]))
+    pads = [(-n) % D for n in sizes]
+
+    x_sh = NamedSharding(mesh, P(sample_axes, feature_axis))
+    row_sh = NamedSharding(mesh, P(sample_axes))
+    kn_sh = NamedSharding(mesh, P(None, sample_axes))
+    feeder = BlockFeeder(
+        [_pad_rows(np.asarray(b), p) for b, p in zip(blocks, pads)],
+        placement=x_sh, prefetch=prefetch,
+    )
+
+    def kernel(xb_loc, y_loc, w_loc, valid_loc):
+        leaves = _route_sharded(forest, xb_loc, feature_axis=feature_axis)
+        counts = jnp.take_along_axis(
+            forest.class_counts, leaves[..., None], axis=1
+        )
+        pred = jnp.argmax(counts, axis=-1)                       # [k, Nl]
+        oob = (w_loc == 0.0).astype(jnp.float32) * valid_loc[None]
+        correct = jax.lax.psum(
+            jnp.sum(oob * (pred == y_loc[None]).astype(jnp.float32), 1),
+            sample_axes,
+        )
+        total = jax.lax.psum(jnp.sum(oob, 1), sample_axes)
+        return correct, total
+
+    fn = jax.jit(_shard_map(
+        kernel, mesh=mesh,
+        in_specs=(P(sample_axes, feature_axis), P(sample_axes),
+                  P(None, sample_axes), P(sample_axes)),
+        out_specs=(P(), P()),
+    ))
+
+    k = w_np.shape[0]
+    correct = jnp.zeros((k,), jnp.float32)
+    total = jnp.zeros((k,), jnp.float32)
+    for i, xb_b in enumerate(feeder.sweep()):
+        o0, o1 = offsets[i], offsets[i + 1]
+        valid = np.zeros(sizes[i] + pads[i], np.float32)
+        valid[:sizes[i]] = 1.0
+        c, t = fn(
+            xb_b,
+            jax.device_put(_pad_rows(y_np[o0:o1], pads[i]), row_sh),
+            jax.device_put(_pad_rows(w_np[:, o0:o1].T, pads[i]).T, kn_sh),
+            jax.device_put(valid, row_sh),
+        )
+        correct, total = correct + c, total + t
+    return jnp.where(total > 0, correct / jnp.maximum(total, 1.0), 0.5)
+
+
+def predict_streamed_sharded(
+    forest: Forest,
+    x_binned,
+    mesh: Mesh,
+    *,
+    sample_block: int = 0,
+    sample_axes: Sequence[str] = ("data",),
+    feature_axis: str = "model",
+    prefetch: int = 2,
+) -> np.ndarray:
+    """Distributed Eq. (10) prediction over host sample blocks — labels
+    are per-sample, so the blocked sweep is bit-identical to
+    ``predict_sharded`` on the full matrix; only one padded block is
+    device-resident at a time. Returns [N] labels (host array)."""
+    from ..data.pipeline import BlockFeeder, stream_blocks
+
+    sample_axes = tuple(sample_axes)
+    blocks = stream_blocks(
+        x_binned, sample_block, what="predict_streamed_sharded"
+    )
+    sizes = [b.shape[0] for b in blocks]
+    D = int(np.prod([mesh.shape[a] for a in sample_axes]))
+    pads = [(-n) % D for n in sizes]
+    x_sh = NamedSharding(mesh, P(sample_axes, feature_axis))
+    feeder = BlockFeeder(
+        [_pad_rows(np.asarray(b), p) for b, p in zip(blocks, pads)],
+        placement=x_sh, prefetch=prefetch,
+    )
+    fn = jax.jit(_shard_map(
+        partial(_vote_labels_kernel, forest, feature_axis=feature_axis),
+        mesh=mesh,
+        in_specs=(P(sample_axes, feature_axis),),
+        out_specs=P(sample_axes),
+    ))
+    out = [
+        np.asarray(fn(xb_b))[:sizes[i]] for i, xb_b in enumerate(feeder.sweep())
+    ]
+    return np.concatenate(out)
+
+
 def _route_sharded(forest: Forest, xb_loc, *, feature_axis: str):
     """route_to_leaves when features are sharded over `feature_axis`."""
     k = forest.feature.shape[0]
@@ -341,27 +699,31 @@ def make_prf_train_fn(
     return jax.jit(train, in_shardings=in_shardings), in_shardings
 
 
+def _vote_labels_kernel(forest: Forest, xb_loc, *, feature_axis: str):
+    """Per-device Eq. (10) voting over a feature-sharded block — the ONE
+    kernel behind both the resident ``predict_sharded`` and the
+    mesh-streamed ``predict_streamed_sharded`` sweeps."""
+    leaves = _route_sharded(forest, xb_loc, feature_axis=feature_axis)
+    counts = jnp.take_along_axis(forest.class_counts, leaves[..., None], axis=1)
+    probs = counts / jnp.maximum(counts.sum(-1, keepdims=True), 1e-38)
+    w = (
+        forest.tree_weight
+        if forest.config.weighted_voting
+        else jnp.ones_like(forest.tree_weight)
+    )
+    from .voting import weighted_vote
+
+    scores = weighted_vote(probs, w, soft=forest.config.soft_voting)
+    return jnp.argmax(scores, -1)
+
+
 def predict_sharded(forest: Forest, x_binned, mesh, *,
                     sample_axes=("data",), feature_axis="model"):
     """Distributed weighted-voting prediction (Eq. 10). Returns [N] labels."""
     sample_axes = tuple(sample_axes)
-
-    def kernel(xb_loc):
-        leaves = _route_sharded(forest, xb_loc, feature_axis=feature_axis)
-        counts = jnp.take_along_axis(forest.class_counts, leaves[..., None], axis=1)
-        probs = counts / jnp.maximum(counts.sum(-1, keepdims=True), 1e-38)
-        w = (
-            forest.tree_weight
-            if forest.config.weighted_voting
-            else jnp.ones_like(forest.tree_weight)
-        )
-        from .voting import weighted_vote
-
-        scores = weighted_vote(probs, w, soft=forest.config.soft_voting)
-        return jnp.argmax(scores, -1)
-
     fn = _shard_map(
-        kernel, mesh=mesh,
+        partial(_vote_labels_kernel, forest, feature_axis=feature_axis),
+        mesh=mesh,
         in_specs=(P(sample_axes, feature_axis),),
         out_specs=P(sample_axes),
     )

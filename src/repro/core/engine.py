@@ -434,6 +434,45 @@ def route_level(
     return jnp.where(live & (rank_i >= 0), 2 * rank_i + go_right, -1)
 
 
+def stream_block_step(
+    hist_acc, xb_b, base_b, w_b, slot_b, slot_node,
+    split_rank, scores: Optional[SplitScores],
+    config: ForestConfig, plane: CollectivePlane, *, route: bool,
+):
+    """ONE device call per (block, level) of the streaming data plane.
+
+    Fuses the route and histogram passes the PR-4 driver ran as two
+    separate sweeps: route the block's samples from the *previous*
+    level's frontier into this level's child slots (``route=True`` from
+    level 1 on; ``split_rank``/``scores`` are that level's plan), then
+    immediately fold the block into this level's histogram carry — so
+    each level reads every block exactly once, and the per-sample slot
+    table ``slot_b`` stays device-resident across levels (it is carried
+    through this call, never round-tripped to the host).
+
+    ``base_b`` (label channels) and ``w_b`` (DSI weights) are the
+    per-block constants a ``BlockFeeder`` pins on device once for the
+    whole growth. Works on any plane: ``route_level`` goes through
+    ``plane.broadcast_route`` (identity gather locally, feature-axis
+    psum on the mesh) and the histogram stays a local partial — the
+    plane's ``combine_hist`` runs once per level in the plan step, not
+    per block.
+
+    Returns ``(hist_acc + block_hist, routed slot_b)``.
+    """
+    if route:
+        slot_b = route_level(xb_b, slot_b, split_rank, scores, plane)
+    tree_live = jnp.any(slot_node >= 0, axis=1)
+    w_lvl = w_b * tree_live[:, None].astype(w_b.dtype)
+    h = level_histograms(
+        xb_b, base_b, w_lvl, slot_b,
+        n_slots=config.frontier, n_bins=config.n_bins,
+        packed=config.packed_hist and not config.regression,
+        backend=config.hist_backend,
+    )
+    return hist_acc + h, slot_b
+
+
 def next_frontier(is_split, child_base, n_slots: int) -> jnp.ndarray:
     """Next level's frontier: this level's children, densely packed."""
     j = jnp.arange(n_slots)[None, :]

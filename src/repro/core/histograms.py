@@ -34,9 +34,15 @@ blocked dimension-reduction sweep in core/dimred.py) calls
 ``level_histograms`` on one ``hist_feature_slab``-wide column slice at a
 time, so the full ``[tc, S, F, B, C]`` tensor never reaches HBM;
 ``blocked_level_histograms`` is the sample-axis analogue (a resumable
-accumulation over ``[sample_block, F]`` row blocks, used by
-``ForestConfig.sample_block`` and the out-of-core
-``core.api.grow_forest_streamed`` driver).
+device-side accumulation over ``[sample_block, F]`` row blocks, used by
+``ForestConfig.sample_block`` on the resident path). The host-streaming
+data plane (``core.api.grow_forest_streamed`` and the mesh-composed
+``core.distributed.grow_forest_streamed_sharded``) runs the same
+accumulation across HOST-fed blocks instead: one ``level_histograms``
+call per block per level inside ``engine.stream_block_step``, summed
+into a device-resident carry. Both orders are exact for integer-valued
+DSI counts (every partial sum is an exact f32 integer below 2**24), so
+resident, device-blocked, and host-streamed training agree bitwise.
 """
 from __future__ import annotations
 

@@ -76,31 +76,47 @@ class ForestConfig:
     # fused_vote_scores' chunk carry on the predict side). 0 => one pass.
     # Integer-valued DSI counts make the blocked accumulation bit-exact
     # for classification; regression channels agree to float rounding.
-    # The host-streaming ``grow_forest_streamed`` path (core/api.py)
-    # feeds blocks of this size from a NumPy/memmap source so the full
-    # [N, F] matrix never has to be device-resident.
+    # ``train_prf`` dispatches the WHOLE pipeline (binning, dimred,
+    # growth, OOB weights, prediction) through the streaming data plane
+    # when this is > 0 — the host-streaming ``grow_forest_streamed``
+    # driver (core/api.py) feeds blocks of this size from a NumPy/memmap
+    # source with async double-buffered host->device copies
+    # (data.pipeline.BlockFeeder), so the full [N, F] matrix is never
+    # device-resident.
     sample_block: int = 0
     regression: bool = False
     # --- §Perf optimizations (beyond-paper; see EXPERIMENTS.md §Perf) ------
     packed_hist: bool = False         # class index folded into segment ids
     hist_reduce: str = "psum"         # psum | psum_scatter (distributed T_GR)
+    # Backend "auto" resolution (all three knobs below): pallas ONLY when
+    # `jax.default_backend() == "tpu"`, the XLA oracle everywhere else.
+    # Off-TPU the pallas kernels exist solely in `interpret=True`
+    # emulation — a Python-level interpreter, not hardware — and the
+    # measured CPU numbers in BENCH_kernels.json make the policy hard:
+    # predict_pallas is ~65x slower than predict_xla (162983 vs 2513
+    # us/call), level_hist_pallas ~1.3x slower than segment_sum, and
+    # level_scores_pallas ~1.7x slower than the xla scorer. "auto" must
+    # therefore NEVER resolve to an emulated kernel: the resolvers
+    # (histograms.resolve_backend, gain.resolve_split_backend,
+    # voting.resolve_predict_backend) key on the platform, never on
+    # availability. Force `*_backend="pallas"` off-TPU only to exercise
+    # the kernel code paths (that is what the parity tests do).
+    #
     # T_GR backend: "pallas" = fused MXU one-hot-matmul kernel
-    # (kernels/gain_ratio, interpret mode off-TPU), "segment_sum" = XLA
-    # scatter vmap, "auto" = pallas on TPU else segment_sum. See PERF.md.
+    # (kernels/gain_ratio), "segment_sum" = XLA scatter vmap. See PERF.md.
     hist_backend: str = "auto"
     # T_NS backend: "pallas" = fused split-scan kernel (kernels/split_scan)
     # — on the single-host path it chains hist-kernel -> score-kernel per
     # feature slab so the [tc, S, F, B, C] histogram never reaches HBM;
-    # "xla" = vectorized jnp argmax over the full histogram; "auto" =
-    # pallas on TPU else xla. See PERF.md.
+    # "xla" = vectorized jnp argmax over the full histogram. See PERF.md.
     split_backend: str = "auto"
     # Prediction backend: "pallas" = fused traversal+voting kernel
     # (kernels/tree_traverse) — the depth walk runs in VMEM and the
     # Eq. 9/10 weighted vote accumulates across the tree grid axis, so
     # the [k, N, C] per-tree probability tensor never exists; "xla" =
-    # route_to_leaves + weighted_vote over the full tensor; "auto" =
-    # pallas on TPU else xla. Honored by voting.predict /
-    # predict_regression, PRFModel.predict and serving/. See PERF.md.
+    # route_to_leaves + weighted_vote over the full tensor. Honored by
+    # voting.predict / predict_regression, PRFModel.predict and
+    # serving/. See PERF.md.
     predict_backend: str = "auto"
 
     @property

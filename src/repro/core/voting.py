@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .forest import fused_vote_scores, predict_proba_trees, predict_value_trees
 from .types import Forest
@@ -116,6 +117,163 @@ def weighted_regression(
     if faithful_eq9:
         return jnp.mean(w * values, axis=0)
     return jnp.sum(w * values, axis=0) / jnp.maximum(tree_weight.sum(), 1e-38)
+
+
+# ---------------------------------------------------------------------------
+# Streamed OOB + prediction — the sample-block carriers of the data plane
+# ---------------------------------------------------------------------------
+
+
+def _block_feeder(x_binned, sample_block, prefetch, *, what,
+                  n_y=None, n_w=None):
+    """BlockFeeder over a validated block list (``pipeline.stream_blocks``:
+    explicit sequences pass through — device arrays included — array
+    sources require ``sample_block > 0``, and blocks must cover the
+    caller's label/weight lengths when given)."""
+    from ..data.pipeline import BlockFeeder, stream_blocks
+
+    return BlockFeeder(
+        stream_blocks(x_binned, sample_block, what=what, n_y=n_y, n_w=n_w),
+        prefetch=prefetch,
+    )
+
+
+@jax.jit
+def _oob_block_counts(forest: Forest, xb_b, y_b, w_b):
+    """One block's contribution to Eq. (8): (#correct, #OOB) per tree."""
+    probs = predict_proba_trees(forest, xb_b)              # [k, Nb, C]
+    pred = jnp.argmax(probs, axis=-1)
+    oob = (w_b == 0.0).astype(jnp.float32)
+    correct = jnp.sum(oob * (pred == y_b[None]).astype(jnp.float32), axis=1)
+    return correct, jnp.sum(oob, axis=1)
+
+
+def oob_accuracy_streamed(
+    forest: Forest, x_binned, y, weights, *,
+    sample_block: int | None = None, prefetch: int = 2,
+) -> jnp.ndarray:
+    """Eq. (8) accumulated over sample blocks — the full binned matrix is
+    never device-resident. ``#correct`` and ``#OOB`` are sums of 0/1
+    floats (exact f32 integers), so the blocked accumulation is
+    **bit-identical** to the resident ``oob_accuracy``."""
+    y_np = np.asarray(y)
+    w_np = np.asarray(weights, dtype=np.float32)
+    feeder = _block_feeder(
+        x_binned, sample_block, prefetch, what="oob_accuracy_streamed",
+        n_y=y_np.shape[0], n_w=w_np.shape[1],
+    )
+    k = w_np.shape[0]
+    correct = jnp.zeros((k,), jnp.float32)
+    total = jnp.zeros((k,), jnp.float32)
+    o = 0
+    for xb_b in feeder.sweep():
+        n = xb_b.shape[0]
+        c, t = _oob_block_counts(
+            forest, xb_b, feeder.pin(y_np[o:o + n]),
+            feeder.pin(w_np[:, o:o + n]),
+        )
+        correct, total = correct + c, total + t
+        o += n
+    return jnp.where(total > 0, correct / jnp.maximum(total, 1.0), 0.5)
+
+
+@jax.jit
+def _r2_mean_stats(y, w):
+    """The OOB mean's sufficient statistics — needs y/weights only, so
+    it runs on the full [k, N] arrays exactly like the resident path
+    (same one-shot jnp sums, no feature block ever touched)."""
+    oob = (w == 0.0).astype(jnp.float32)
+    return jnp.sum(oob * y[None], axis=1), oob.sum(1)
+
+
+@jax.jit
+def _r2_moment_block(forest: Forest, xb_b, y_b, w_b, mean):
+    vals = predict_value_trees(forest, xb_b)               # [k, Nb]
+    oob = (w_b == 0.0).astype(jnp.float32)
+    err = jnp.sum(oob * (vals - y_b[None]) ** 2, axis=1)
+    var = jnp.sum(oob * (y_b[None] - mean[:, None]) ** 2, axis=1)
+    return err, var
+
+
+def oob_r2_streamed(
+    forest: Forest, x_binned, y, weights, *,
+    sample_block: int | None = None, prefetch: int = 2,
+) -> jnp.ndarray:
+    """Blocked ``oob_r2``: ONE sweep over the feature blocks. The OOB
+    mean needs only ``y``/``weights`` (computed with the resident
+    path's one-shot sums — no block feed), so only the centered-moment
+    pass streams the ``[Nb, F]`` blocks. Matches ``oob_r2`` to float
+    rounding (the moment pass's per-block partial sums reassociate the
+    sample reduction; OOB counts themselves are exact)."""
+    y_np = np.asarray(y, dtype=np.float32)
+    w_np = np.asarray(weights, dtype=np.float32)
+    feeder = _block_feeder(
+        x_binned, sample_block, prefetch, what="oob_r2_streamed",
+        n_y=y_np.shape[0], n_w=w_np.shape[1],
+    )
+    sum_y, total = _r2_mean_stats(jnp.asarray(y_np), jnp.asarray(w_np))
+    n = jnp.maximum(total, 1.0)
+    mean = sum_y / n
+
+    err_sum = var_sum = 0.0
+    o = 0
+    for xb_b in feeder.sweep():
+        nb = xb_b.shape[0]
+        err, var = _r2_moment_block(
+            forest, xb_b, feeder.pin(y_np[o:o + nb]),
+            feeder.pin(w_np[:, o:o + nb]), mean,
+        )
+        err_sum, var_sum = err_sum + err, var_sum + var
+        o += nb
+    err, var = err_sum / n, var_sum / n
+    r2 = jnp.clip(1.0 - err / jnp.maximum(var, 1e-38), 0.0, 1.0)
+    return jnp.where((total > 0) & (var > 0), r2, 0.5)
+
+
+def predict_scores_streamed(
+    forest: Forest, x_binned, *, sample_block: int | None = None,
+    backend: str | None = None, prefetch: int = 2,
+) -> jnp.ndarray:
+    """``predict_scores`` over sample blocks. Scores are per-sample, so
+    the blocked path is bit-identical to the resident call; only the
+    [N, C] score matrix (never [N, F]) is materialized."""
+    feeder = _block_feeder(
+        x_binned, sample_block, prefetch, what="predict_scores_streamed"
+    )
+    return jnp.concatenate([
+        predict_scores(forest, xb_b, backend=backend)
+        for xb_b in feeder.sweep()
+    ])
+
+
+def predict_streamed(
+    forest: Forest, x_binned, *, sample_block: int | None = None,
+    backend: str | None = None, prefetch: int = 2,
+) -> jnp.ndarray:
+    """Streamed classification labels [N] (bit-identical to ``predict``)."""
+    return jnp.argmax(
+        predict_scores_streamed(
+            forest, x_binned, sample_block=sample_block, backend=backend,
+            prefetch=prefetch,
+        ),
+        axis=-1,
+    )
+
+
+def predict_regression_streamed(
+    forest: Forest, x_binned, *, sample_block: int | None = None,
+    backend: str | None = None, prefetch: int = 2,
+) -> jnp.ndarray:
+    """Streamed regression predictions [N] (per-sample, so bit-identical
+    to ``predict_regression``)."""
+    feeder = _block_feeder(
+        x_binned, sample_block, prefetch, what="predict_regression_streamed"
+    )
+    num = jnp.concatenate([
+        predict_regression_scores(forest, xb_b, backend=backend)
+        for xb_b in feeder.sweep()
+    ])
+    return num / jnp.maximum(_vote_weights(forest).sum(), 1e-38)
 
 
 # ---------------------------------------------------------------------------

@@ -11,7 +11,9 @@ of real tokens in production.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, List, Optional, Sequence, Union
+import queue
+import threading
+from typing import Any, Dict, Iterator, List, Optional, Sequence, Union
 
 import numpy as np
 
@@ -34,6 +36,147 @@ def sample_blocks(
     src = np.asarray(x)
     nb = block_rows if block_rows > 0 else src.shape[0]
     return [src[i:i + nb] for i in range(0, src.shape[0], nb)]
+
+
+def stream_blocks(
+    x: Union[np.ndarray, Sequence[Any]],
+    sample_block: Optional[int],
+    *,
+    what: str,
+    n_y: Optional[int] = None,
+    n_w: Optional[int] = None,
+) -> List[Any]:
+    """The ONE block-list constructor + validator of the streaming data
+    plane (growth, dimred, OOB, prediction — local and mesh).
+
+    An explicit block sequence passes through (device arrays included);
+    an array/memmap source is sliced per ``sample_block``, which must be
+    > 0 so the full ``[N, F]`` matrix can never silently become one
+    device block. Rejects empty block sequences, and — when the caller
+    supplies its label/weight lengths — blocks that do not cover them.
+    """
+    if isinstance(x, (list, tuple)):
+        blocks = list(x)
+    else:
+        if sample_block is None or sample_block <= 0:
+            raise ValueError(
+                f"{what} with an array/memmap source needs sample_block > 0 "
+                "— sample_block=0 would feed the whole [N, F] matrix as one "
+                "device block, which is exactly what the streaming plane "
+                "exists to avoid (pass an explicit block list to stream "
+                "from a custom source)"
+            )
+        blocks = sample_blocks(x, sample_block)
+    if not blocks:
+        raise ValueError(
+            f"{what} got an empty block sequence — the data source yielded "
+            "no [Nb, F] sample blocks (empty block list, or an array source "
+            "with 0 rows)"
+        )
+    if n_y is not None or n_w is not None:
+        covered = sum(int(b.shape[0]) for b in blocks)
+        if (n_y is not None and covered != n_y) or (
+            n_w is not None and covered != n_w
+        ):
+            raise ValueError(
+                f"{what}: blocks cover {covered} samples, but y has {n_y} "
+                f"and weights {n_w}"
+            )
+    return blocks
+
+
+class BlockFeeder:
+    """Async double-buffered host->device feed of the streaming data plane.
+
+    One feeder owns the host-side sample blocks for a whole training /
+    evaluation run. Two jobs:
+
+    * ``pin(a)`` — one-shot ``jax.device_put`` of a per-block constant
+      (``y``, DSI weights, channel matrices): uploaded ONCE and kept
+      device-resident for every subsequent level sweep, instead of
+      re-fed per level.
+    * ``sweep()`` — yield device copies of the blocks in order, with a
+      background thread running block ``i+1``'s host->device copy while
+      block ``i``'s histogram/route call executes (``prefetch`` copies
+      in flight; ``prefetch=0`` degrades to the synchronous feed). JAX
+      dispatch is async, so the consumer's device work and the
+      producer's ``device_put`` genuinely overlap.
+
+    ``placement`` is anything ``jax.device_put`` accepts as a target —
+    a device for the single-host driver, or a ``NamedSharding`` so each
+    mesh shard receives its (sample x feature) slice of every block
+    (the mesh-streamed path, ``distributed.grow_forest_streamed_sharded``).
+    """
+
+    def __init__(
+        self,
+        blocks: Sequence[Any],
+        *,
+        placement: Any = None,
+        prefetch: int = 2,
+    ):
+        self.blocks = list(blocks)
+        if not self.blocks:
+            raise ValueError(
+                "BlockFeeder needs at least one sample block — got an empty "
+                "block sequence"
+            )
+        self.placement = placement
+        self.prefetch = int(prefetch)
+
+    def __len__(self) -> int:
+        return len(self.blocks)
+
+    def pin(self, host_array):
+        """Pin one host array on device (respecting ``placement``)."""
+        import jax
+
+        if self.placement is None:
+            return jax.device_put(host_array)
+        return jax.device_put(host_array, self.placement)
+
+    def sweep(self) -> Iterator[Any]:
+        """Yield the blocks as device arrays, prefetch-deep."""
+        if self.prefetch <= 0:
+            for b in self.blocks:
+                yield self.pin(b)
+            return
+
+        q: "queue.Queue[Any]" = queue.Queue(maxsize=self.prefetch)
+        stop = object()
+        cancel = threading.Event()
+
+        def produce():
+            try:
+                for b in self.blocks:
+                    if cancel.is_set():
+                        return
+                    q.put(self.pin(b))
+                q.put(stop)
+            except BaseException as e:  # surfaced on the consumer side
+                q.put(e)
+
+        t = threading.Thread(
+            target=produce, daemon=True, name="prf-block-feeder"
+        )
+        t.start()
+        try:
+            while True:
+                item = q.get()
+                if item is stop:
+                    break
+                if isinstance(item, BaseException):
+                    raise item
+                yield item
+        finally:
+            # Unblock the producer if the consumer stopped early.
+            cancel.set()
+            try:
+                while True:
+                    q.get_nowait()
+            except queue.Empty:
+                pass
+            t.join(timeout=10)
 
 
 @dataclasses.dataclass

@@ -81,14 +81,33 @@ def test_early_exit_matches_on_depth_starved_forest(grow_case):
 # ---------------------------------------------------------------------------
 
 
-def test_streamed_blocks_match_resident(grow_case):
+@pytest.mark.parametrize("prefetch", [0, 2])
+def test_streamed_blocks_match_resident(grow_case, prefetch):
     """>= 4 host-fed blocks -> the exact resident forest; no device call
-    ever sees the full [N, F] matrix (the block list IS the feed API)."""
+    ever sees the full [N, F] matrix (the block list IS the feed API).
+    prefetch=0 is the synchronous feed, prefetch=2 the async
+    double-buffered BlockFeeder — both run the fused route+hist pass
+    and must be bit-identical to the resident engine."""
     xb, y, w, cfg = grow_case
     blocks = np.array_split(xb, 5)
     assert len(blocks) >= 4 and max(b.shape[0] for b in blocks) < xb.shape[0]
-    f_st = grow_forest_streamed(blocks, y, w, cfg)
-    _assert_forests_equal(f_st, _grow(xb, y, w, cfg), "streamed blocks")
+    f_st = grow_forest_streamed(blocks, y, w, cfg, prefetch=prefetch)
+    _assert_forests_equal(
+        f_st, _grow(xb, y, w, cfg), f"streamed blocks prefetch={prefetch}"
+    )
+
+
+def test_streamed_rejects_empty_block_sequence(grow_case):
+    """An empty block list must raise a clear ValueError, not IndexError
+    on blocks[0]."""
+    xb, y, w, cfg = grow_case
+    with pytest.raises(ValueError, match="empty block sequence"):
+        grow_forest_streamed([], y, w, cfg)
+    with pytest.raises(ValueError, match="empty block sequence"):
+        grow_forest_streamed(
+            xb[:0], y[:0], w[:, :0],
+            dataclasses.replace(cfg, sample_block=64),
+        )
 
 
 def test_streamed_array_source_uses_sample_block(grow_case):
@@ -144,6 +163,90 @@ def test_streamed_regression_close():
     np.testing.assert_allclose(
         np.asarray(f_st.value), np.asarray(f_rs.value), rtol=1e-5, atol=1e-5
     )
+
+
+# ---------------------------------------------------------------------------
+# Streamed OOB + prediction (the sample-block carriers)
+# ---------------------------------------------------------------------------
+
+
+def test_streamed_oob_and_predict_match_resident(grow_case):
+    """Blocked OOB accuracy and prediction == resident, bitwise (OOB
+    correct/total counts are exact f32 integer sums; labels are
+    per-sample)."""
+    from repro.core.voting import (
+        oob_accuracy, oob_accuracy_streamed, predict, predict_scores,
+        predict_scores_streamed, predict_streamed,
+    )
+
+    xb, y, w, cfg = grow_case
+    forest = _grow(xb, y, w, cfg)
+    blocks = np.array_split(xb, 5)
+    xb_dev, y_dev, w_dev = jnp.asarray(xb), jnp.asarray(y), jnp.asarray(w)
+
+    np.testing.assert_array_equal(
+        np.asarray(oob_accuracy_streamed(forest, blocks, y, w)),
+        np.asarray(oob_accuracy(forest, xb_dev, y_dev, w_dev)),
+    )
+    # Array source + sample_block slicing, prefetch on and off.
+    for prefetch in (0, 2):
+        np.testing.assert_array_equal(
+            np.asarray(oob_accuracy_streamed(
+                forest, xb, y, w, sample_block=130, prefetch=prefetch,
+            )),
+            np.asarray(oob_accuracy(forest, xb_dev, y_dev, w_dev)),
+        )
+    np.testing.assert_array_equal(
+        np.asarray(predict_streamed(forest, blocks)),
+        np.asarray(predict(forest, xb_dev)),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(predict_scores_streamed(forest, xb, sample_block=200)),
+        np.asarray(predict_scores(forest, xb_dev)),
+    )
+    with pytest.raises(ValueError, match="sample_block"):
+        oob_accuracy_streamed(forest, xb, y, w)   # array source needs blocks
+
+
+def test_streamed_oob_r2_close():
+    """Blocked OOB R^2 reassociates float sums -> close, not bitwise;
+    degenerate-OOB neutral priors must match exactly."""
+    from repro.core.voting import oob_r2, oob_r2_streamed
+
+    x, y = make_regression(500, 11, seed=4)
+    cfg = ForestConfig(
+        n_trees=5, max_depth=4, n_bins=16, regression=True, feature_mode="all"
+    )
+    xb, _ = bin_dataset(x, cfg.n_bins)
+    w = np.asarray(
+        bootstrap_counts(jax.random.PRNGKey(2), cfg.n_trees, xb.shape[0])
+    ).astype(np.float32)
+    yf = y.astype(np.float32)
+    forest = _grow(xb, yf, w, cfg)
+    r_res = np.asarray(oob_r2(forest, jnp.asarray(xb), jnp.asarray(yf), jnp.asarray(w)))
+    r_st = np.asarray(oob_r2_streamed(forest, np.array_split(xb, 4), yf, w))
+    np.testing.assert_allclose(r_st, r_res, rtol=1e-5, atol=1e-5)
+
+
+def test_train_prf_sample_block_dispatches_streamed(grow_case):
+    """The public entry point: config.sample_block > 0 routes the WHOLE
+    pipeline (binning, dimred, growth, OOB weights, prediction) through
+    the streaming data plane, bit-identical to the resident train_prf."""
+    from repro.core import train_prf
+
+    xb, y, w, cfg = grow_case
+    x, _ = make_classification(n_samples=600, n_features=13, n_classes=3, seed=3)
+    cfg_imp = dataclasses.replace(cfg, feature_mode="importance")
+    m_res = train_prf(x, y, cfg_imp, seed=11)
+    m_st = train_prf(
+        x, y, dataclasses.replace(cfg_imp, sample_block=140), seed=11
+    )
+    _assert_forests_equal(m_st.forest, m_res.forest, "train_prf streamed")
+    np.testing.assert_array_equal(
+        np.asarray(m_st.forest.tree_weight), np.asarray(m_res.forest.tree_weight)
+    )
+    np.testing.assert_array_equal(m_st.predict(x), m_res.predict(x))
+    np.testing.assert_array_equal(m_st.predict_scores(x), m_res.predict_scores(x))
 
 
 # ---------------------------------------------------------------------------
@@ -224,7 +327,10 @@ def test_growth_state_pytree_roundtrips_jit(grow_case):
 def test_mesh_plane_matches_local_bitwise():
     """The full plane matrix: {psum, psum_scatter} x {early-exit,
     fixed-depth} sharded growth == single-host growth, bit-for-bit,
-    given identical DSI weights."""
+    given identical DSI weights — plus the mesh-STREAMED driver
+    (host blocks fed into the collective plane), streamed-sharded OOB,
+    and streamed-sharded prediction, all bitwise against the local
+    resident references."""
     code = textwrap.dedent("""
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -233,10 +339,14 @@ def test_mesh_plane_matches_local_bitwise():
         from jax.sharding import PartitionSpec as P
         from repro.core import ForestConfig
         from repro.core.binning import bin_dataset
-        from repro.core.distributed import _grow_sharded, _shard_map
+        from repro.core.distributed import (
+            _grow_sharded, _shard_map, grow_forest_streamed_sharded,
+            oob_accuracy_streamed_sharded, predict_streamed_sharded,
+        )
         from repro.core.dsi import bootstrap_counts
         from repro.core.forest import grow_forest
         from repro.core.histograms import class_channels
+        from repro.core.voting import oob_accuracy, predict
         from repro.data.tabular import make_classification
         from repro.launch.mesh import make_mesh
 
@@ -244,10 +354,16 @@ def test_mesh_plane_matches_local_bitwise():
         cfg0 = ForestConfig(n_trees=6, max_depth=4, n_bins=16, n_classes=3,
                             feature_mode="all")
         xb, _ = bin_dataset(x, cfg0.n_bins)
-        xb, y = jnp.asarray(xb), jnp.asarray(y)
+        y_np, w_np = np.asarray(y), None
+        xb_dev, y_dev = jnp.asarray(xb), jnp.asarray(y)
         w = bootstrap_counts(jax.random.PRNGKey(1), cfg0.n_trees,
                              xb.shape[0]).astype(jnp.float32)
+        w_np = np.asarray(w)
         mesh = make_mesh((4, 2), ("data", "model"))
+        ARRS = ("feature", "threshold", "left_child", "class_counts", "value")
+        # Ragged block sizes: exercises the parked-sample padding to the
+        # data-axis multiple inside the mesh-streamed driver.
+        blocks = [xb[:150], xb[150:290], xb[290:500], xb[500:]]
 
         for hist_reduce in ("psum", "psum_scatter"):
             for early in (True, False):
@@ -262,14 +378,33 @@ def test_mesh_plane_matches_local_bitwise():
                     kernel, mesh=mesh,
                     in_specs=(P("data", "model"), P("data"), P(None, "data")),
                     out_specs=P(),
-                ))(xb, y, w)
-                f_loc = grow_forest(xb, y, w, cfg)
-                for n in ("feature", "threshold", "left_child",
-                          "class_counts", "value"):
+                ))(xb_dev, y_dev, w)
+                f_loc = grow_forest(xb_dev, y_dev, w, cfg)
+                for n in ARRS:
                     np.testing.assert_array_equal(
                         np.asarray(getattr(f_mesh, n)),
                         np.asarray(getattr(f_loc, n)),
                         err_msg=f"{n} {hist_reduce} early={early}")
+            # Mesh x streaming: host blocks fed into the same collective
+            # plane == the local resident forest, bit-for-bit.
+            f_ms = grow_forest_streamed_sharded(
+                blocks, y_np, w_np, dataclasses.replace(cfg0,
+                hist_reduce=hist_reduce), mesh)
+            f_loc = grow_forest(xb_dev, y_dev, w, cfg0)
+            for n in ARRS:
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(f_ms, n)), np.asarray(getattr(f_loc, n)),
+                    err_msg=f"{n} streamed {hist_reduce}")
+        print("MESH_STREAM_GROW_OK")
+
+        f_loc = grow_forest(xb_dev, y_dev, w, cfg0)
+        np.testing.assert_array_equal(
+            np.asarray(oob_accuracy_streamed_sharded(f_loc, blocks, y_np,
+                                                     w_np, mesh)),
+            np.asarray(oob_accuracy(f_loc, xb_dev, y_dev, w)))
+        np.testing.assert_array_equal(
+            predict_streamed_sharded(f_loc, blocks, mesh),
+            np.asarray(predict(f_loc, xb_dev)))
         print("MESH_PARITY_OK")
     """)
     out = subprocess.run(
