@@ -156,6 +156,57 @@ def run_predict():
         "derived": f"batch=1024,{shape}",
         "rows_per_s": 1024 / (us / 1e6),
     })
+
+    # Resilience rows (PERF.md "Resilience"). serve_overload floods
+    # submit() against a 128-row admission cap, draining every 24
+    # requests — admitted requests report submit->resolve latency,
+    # overflow is shed with typed errors, never queued. serve_hotswap
+    # times a ModelRegistry publish under 32 in-flight futures; the
+    # old version drains on retirement, so dropped_futures must be 0.
+    from repro.serving import ModelRegistry, ServiceError
+
+    ovl = PRFService(model, max_batch=1024, min_bucket=8, max_queue_rows=128)
+    ovl.predict(batch[:8])  # warm the small-bucket forward pass
+    lat, pending, shed, total = [], [], 0, 288
+    for i in range(total):
+        t0 = time.perf_counter()
+        try:
+            j = (i * 8) % (N - 8)
+            pending.append((ovl.submit(x[j:j + 8]), t0))
+        except ServiceError:
+            shed += 1
+        if i % 24 == 23:
+            ovl.drain()
+            now = time.perf_counter()
+            lat += [now - t for _, t in pending]
+            pending = []
+    ovl.drain()
+    now = time.perf_counter()
+    lat += [now - t for _, t in pending]
+    lat_us = sorted(v * 1e6 for v in lat)
+    rows.append({
+        "bench": "serve_overload",
+        "us_per_call": lat_us[len(lat_us) // 2],
+        "derived": f"req=8rows,queue_cap=128rows,drain_every=24,{shape}",
+        "p99_us": lat_us[min(len(lat_us) - 1, int(len(lat_us) * 0.99))],
+        "shed_fraction": shed / total,
+        "admitted": len(lat_us),
+    })
+
+    reg = ModelRegistry(max_batch=1024, min_bucket=8)
+    reg.publish(model)
+    reg.predict(batch[:8])  # warm v1 so the retirement drain is pure serving
+    futs = [reg.submit(x[j * 8:(j + 1) * 8]) for j in range(32)]
+    t0 = time.perf_counter()
+    reg.publish(model)  # hot-swap: pointer flip, then v1 drains its queue
+    swap_us = (time.perf_counter() - t0) * 1e6
+    rows.append({
+        "bench": "serve_hotswap",
+        "us_per_call": swap_us,
+        "derived": f"inflight=32x8rows,{shape}",
+        "dropped_futures": sum(1 for f in futs if not f.done()),
+        "swapped_to_version": reg.version,
+    })
     return rows
 
 

@@ -81,12 +81,78 @@ def run():
         ),
         "derived": f"{SHAPE},blocks={N_BLOCKS},fused_route_hist,sync_feed",
     })
+    us_streamed = _time(
+        lambda: grow_forest_streamed(blocks, y, w, cfg, prefetch=2)
+    )
     rows.append({
         "bench": "train_e2e_streamed_prefetch",
-        "us_per_call": _time(
-            lambda: grow_forest_streamed(blocks, y, w, cfg, prefetch=2)
-        ),
+        "us_per_call": us_streamed,
         "derived": f"{SHAPE},blocks={N_BLOCKS},fused_route_hist,prefetch=2",
+    })
+
+    # Resilience rows (see PERF.md "Resilience"): what per-level
+    # checkpointing costs over the resident while_loop engine, what a
+    # crash resume costs (restore + the remaining levels), and what a
+    # 5%-fault feed under bounded retry costs over the clean stream.
+    import shutil
+    import tempfile
+
+    from repro.checkpoint.checkpoint import CheckpointManager
+    from repro.core.forest import grow_forest_checkpointed
+    from repro.launch.fault import FaultInjector
+
+    ckpt_dir = tempfile.mkdtemp(prefix="bench_ckpt_")
+    try:
+        def ckpt_run():
+            shutil.rmtree(ckpt_dir, ignore_errors=True)
+            return grow_forest_checkpointed(
+                xb_dev, y_dev, w_dev, cfg,
+                manager=CheckpointManager(ckpt_dir, keep=2, save_interval=1),
+            )
+
+        us_ckpt = _time(ckpt_run)
+
+        class _Kill(Exception):
+            pass
+
+        def killer(level, _):
+            if level == DEPTH // 2:
+                raise _Kill
+
+        shutil.rmtree(ckpt_dir, ignore_errors=True)
+        try:
+            grow_forest_checkpointed(
+                xb_dev, y_dev, w_dev, cfg,
+                manager=CheckpointManager(ckpt_dir, keep=2, save_interval=1),
+                on_level=killer,
+            )
+        except _Kill:
+            pass
+        us_resume = _time(lambda: grow_forest_checkpointed(
+            xb_dev, y_dev, w_dev, cfg, resume_from=ckpt_dir,
+        ))
+        rows.append({
+            "bench": "train_checkpoint_resume",
+            "us_per_call": us_ckpt,
+            "derived": f"{SHAPE},ckpt_every_level",
+            "resume_from_midpoint_us": us_resume,
+            "resident_us": rows[0]["us_per_call"],
+        })
+    finally:
+        shutil.rmtree(ckpt_dir, ignore_errors=True)
+
+    def faulted_run():
+        inj = FaultInjector(0.05, seed=3, max_consecutive=2)
+        return grow_forest_streamed(
+            blocks, y, w, cfg, prefetch=2,
+            feeder_opts=dict(fault_hook=inj, max_retries=3, backoff=1e-4),
+        )
+
+    rows.append({
+        "bench": "train_faulted_feed",
+        "us_per_call": _time(faulted_run),
+        "derived": f"{SHAPE},blocks={N_BLOCKS},fault_rate=0.05,retries=3",
+        "clean_us": us_streamed,
     })
 
     forest = grow_forest(xb_dev, y_dev, w_dev, cfg)

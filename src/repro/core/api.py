@@ -28,8 +28,8 @@ from .engine import (
     LocalPlane, _safe_mean, finalize_forest, init_forest, next_frontier,
     plan_level, stream_block_step, write_level,
 )
-from .forest import grow_forest
-from .gain import level_scores, resolve_split_backend
+from .forest import grow_forest, grow_forest_checkpointed
+from .gain import SplitScores, level_scores, resolve_split_backend
 from .histograms import class_channels, regression_channels
 from .types import Forest, ForestConfig
 from .voting import (
@@ -109,11 +109,30 @@ class PRFModel:
         )
 
 
+def _checkpoint_manager(
+    checkpoint_dir: Optional[str], checkpoint_every: int, checkpoint_keep: int
+):
+    if checkpoint_dir is None:
+        return None
+    from ..checkpoint.checkpoint import CheckpointManager
+
+    return CheckpointManager(
+        checkpoint_dir, keep=checkpoint_keep, save_interval=checkpoint_every
+    )
+
+
 def train_prf(
     x: np.ndarray,
     y: np.ndarray,
     config: ForestConfig,
     seed: int = 0,
+    *,
+    checkpoint_dir: Optional[str] = None,
+    checkpoint_every: int = 1,
+    checkpoint_keep: int = 3,
+    resume_from: Optional[str] = None,
+    on_level=None,
+    feeder_opts: Optional[dict] = None,
 ) -> PRFModel:
     """End-to-end PRF training on host data (paper §3 + §4 semantics).
 
@@ -124,10 +143,32 @@ def train_prf(
     device memory, the full ``[N, F]`` matrix is never device-resident,
     and the resulting model is bit-identical to the resident path for
     classification (regression channels agree to float rounding).
+
+    **Crash resume.** ``checkpoint_dir`` turns on per-level growth
+    checkpointing (every ``checkpoint_every`` levels, ``checkpoint_keep``
+    rotated atomic-rename checkpoints); ``resume_from`` restores the
+    latest growth carry from that directory and continues. Everything
+    before growth — binning, the DSI bootstrap, dimension reduction —
+    is a deterministic function of ``(x, y, config, seed)`` and is
+    recomputed on resume, so only the growth carry needs to be durable,
+    and the resumed run's model is **bit-identical** to an
+    uninterrupted one (tests/test_fault.py). An empty ``resume_from``
+    directory means "no progress yet": training starts from scratch,
+    so a crash-retry wrapper can always pass both knobs.
+    ``on_level(level, _)`` fires after each completed (checkpointed)
+    level; ``feeder_opts`` forwards retry/fault-injection knobs to the
+    streamed path's ``BlockFeeder``.
     """
     config = config.resolved(x.shape[1])
     if config.sample_block > 0:
-        return _train_prf_streamed(x, y, config, seed)
+        return _train_prf_streamed(
+            x, y, config, seed,
+            checkpoint=_checkpoint_manager(
+                checkpoint_dir, checkpoint_every, checkpoint_keep
+            ),
+            resume_from=resume_from, on_level=on_level,
+            feeder_opts=feeder_opts,
+        )
     xb_np, edges = bin_dataset(x, config.n_bins)
     xb = jnp.asarray(xb_np)
     y = jnp.asarray(y)
@@ -145,10 +186,17 @@ def train_prf(
             n_selected=config.n_selected,
         )                                                              # §3.1 RF
 
-    forest = grow_forest(
-        xb, y if not config.regression else y.astype(jnp.float32),
-        weights, config, feature_mask
-    )                                                                  # §4.2
+    y_grow = y if not config.regression else y.astype(jnp.float32)
+    if checkpoint_dir is not None or resume_from is not None:
+        forest = grow_forest_checkpointed(
+            xb, y_grow, weights, config, feature_mask,
+            manager=_checkpoint_manager(
+                checkpoint_dir, checkpoint_every, checkpoint_keep
+            ),
+            resume_from=resume_from, on_level=on_level,
+        )                                                              # §4.2
+    else:
+        forest = grow_forest(xb, y_grow, weights, config, feature_mask)  # §4.2
 
     if config.weighted_voting:                                         # §3.3
         w = (
@@ -175,7 +223,12 @@ def _channels(y: jnp.ndarray, config: ForestConfig) -> jnp.ndarray:
 
 
 def _train_prf_streamed(
-    x: np.ndarray, y: np.ndarray, config: ForestConfig, seed: int
+    x: np.ndarray, y: np.ndarray, config: ForestConfig, seed: int,
+    *,
+    checkpoint=None,
+    resume_from: Optional[str] = None,
+    on_level=None,
+    feeder_opts: Optional[dict] = None,
 ) -> PRFModel:
     """``train_prf`` over the streaming data plane (never re-validates
     shapes against a device-resident ``[N, F]`` matrix — there is none).
@@ -215,7 +268,9 @@ def _train_prf_streamed(
 
     y = y if not config.regression else y.astype(jnp.float32)
     forest = grow_forest_streamed(
-        xb_blocks, y, weights, config, feature_mask
+        xb_blocks, y, weights, config, feature_mask,
+        manager=checkpoint, resume_from=resume_from, on_level=on_level,
+        feeder_opts=feeder_opts,
     )                                                                  # §4.2
 
     if config.weighted_voting:                                         # §3.3
@@ -278,9 +333,13 @@ def _stream_plan_write(forest, slot_node, hist, feature_mask, level, config):
     return forest, scores, split_rank, new_slot_node
 
 
-def _stream_setup(x_binned, y, weights, config: ForestConfig, prefetch: int):
+def _stream_setup(
+    x_binned, y, weights, config: ForestConfig, prefetch: int,
+    feeder_opts: Optional[dict] = None,
+):
     """Shared host-side setup of the streaming growth drivers: validated
-    block list and a ``BlockFeeder`` over the blocks."""
+    block list and a ``BlockFeeder`` over the blocks. ``feeder_opts``
+    forwards retry/backoff/fault-injection knobs to the feeder."""
     from ..data.pipeline import BlockFeeder, stream_blocks
 
     y_np = np.asarray(y)
@@ -293,8 +352,32 @@ def _stream_setup(x_binned, y, weights, config: ForestConfig, prefetch: int):
     offsets = np.concatenate([[0], np.cumsum(sizes)])
     if config.regression:
         y_np = y_np.astype(np.float32)
-    feeder = BlockFeeder(blocks, prefetch=prefetch)
+    feeder = BlockFeeder(blocks, prefetch=prefetch, **(feeder_opts or {}))
     return feeder, y_np, w_np, sizes, offsets
+
+
+def _stream_state_like(sizes, config: ForestConfig):
+    """Structure template for the streamed growth checkpoint: the
+    host-driven driver's full inter-level carry. ``scores``/``split_rank``
+    must be part of it — the streaming plane fuses each level's routing
+    into the NEXT level's block sweep, so resuming at level L+1 needs
+    level L's plan, not just the forest and frontier."""
+    k, S = config.n_trees, config.frontier
+    C = 3 if config.regression else config.n_classes
+    return {
+        "forest": init_forest(config),
+        "slot_node": jnp.zeros((k, S), jnp.int32),
+        "scores": SplitScores(
+            jnp.zeros((k, S), jnp.float32),
+            jnp.zeros((k, S), jnp.int32),
+            jnp.zeros((k, S), jnp.int32),
+            jnp.zeros((k, S, C), jnp.float32),
+            jnp.zeros((k, S, C), jnp.float32),
+        ),
+        "split_rank": jnp.zeros((k, S), jnp.int32),
+        "slots": [jnp.zeros((k, n), jnp.int32) for n in sizes],
+        "level": jnp.asarray(0, jnp.int32),
+    }
 
 
 def grow_forest_streamed(
@@ -305,6 +388,10 @@ def grow_forest_streamed(
     feature_mask: Optional[np.ndarray] = None,
     *,
     prefetch: int = 2,
+    manager=None,
+    resume_from: Optional[str] = None,
+    on_level=None,
+    feeder_opts: Optional[dict] = None,
 ) -> Forest:
     """Out-of-core ``grow_forest`` over the async streaming data plane.
 
@@ -351,9 +438,17 @@ def grow_forest_streamed(
     level loop as soon as every tree's frontier is empty (always on —
     the loop is host-driven and the forests are identical either way;
     ``config.early_exit`` only gates the device-side ``lax.while_loop``).
+
+    **Checkpointing** mirrors ``grow_forest_checkpointed``: ``manager``
+    saves the driver's full inter-level carry (forest, frontier, level
+    plan, per-block slot tables — see ``_stream_state_like``) after
+    each level; ``resume_from`` restores the latest carry and the level
+    loop continues where it stopped, producing the bit-identical
+    forest. ``on_level(level, forest)`` fires after each completed
+    level's checkpoint.
     """
     feeder, y_np, w_np, sizes, offsets = _stream_setup(
-        x_binned, y, weights, config, prefetch
+        x_binned, y, weights, config, prefetch, feeder_opts
     )
 
     k, S = config.n_trees, config.frontier
@@ -368,11 +463,25 @@ def grow_forest_streamed(
         o0, o1 = offsets[i], offsets[i + 1]
         base_dev.append(_channels(feeder.pin(y_np[o0:o1]), config))
         w_dev.append(feeder.pin(w_np[:, o0:o1]))
-    # The per-sample frontier table: device-resident across all levels.
-    slot_dev = [jnp.zeros((k, n), jnp.int32) for n in sizes]
 
-    slot_node = jnp.full((k, S), -1, jnp.int32).at[:, 0].set(0)
-    forest, scores, split_rank = None, None, None
+    state = None
+    if resume_from is not None:
+        from ..checkpoint.checkpoint import latest_step, restore_checkpoint
+
+        if latest_step(resume_from) is not None:
+            state, _ = restore_checkpoint(
+                _stream_state_like(sizes, config), resume_from
+            )
+    if state is not None:
+        forest, slot_node = state["forest"], state["slot_node"]
+        scores, split_rank = state["scores"], state["split_rank"]
+        slot_dev, start = list(state["slots"]), int(state["level"])
+    else:
+        # The per-sample frontier table: device-resident across levels.
+        slot_dev = [jnp.zeros((k, n), jnp.int32) for n in sizes]
+        slot_node = jnp.full((k, S), -1, jnp.int32).at[:, 0].set(0)
+        forest, scores, split_rank = None, None, None
+        start = 0
 
     def level_sweep(route: bool):
         hist = jnp.zeros((k, S, F, B, C), jnp.float32)
@@ -384,17 +493,29 @@ def grow_forest_streamed(
             )
         return hist
 
-    for level in range(config.max_depth):
-        if not np.any(np.asarray(slot_node) >= 0):
-            break                                   # every frontier is empty
-        hist = level_sweep(route=level > 0)
-        if forest is None:
-            forest = _stream_init(hist, config)     # root node, free at level 0
-        forest, scores, split_rank, slot_node = _stream_plan_write(
-            forest, slot_node, hist, mask_dev, jnp.asarray(level, jnp.int32),
-            config,
-        )
+    try:
+        for level in range(start, config.max_depth):
+            if not np.any(np.asarray(slot_node) >= 0):
+                break                               # every frontier is empty
+            hist = level_sweep(route=level > 0)
+            if forest is None:
+                forest = _stream_init(hist, config)  # root node, free at level 0
+            forest, scores, split_rank, slot_node = _stream_plan_write(
+                forest, slot_node, hist, mask_dev,
+                jnp.asarray(level, jnp.int32), config,
+            )
+            if manager is not None:
+                manager.maybe_save({
+                    "forest": forest, "slot_node": slot_node,
+                    "scores": scores, "split_rank": split_rank,
+                    "slots": slot_dev,
+                    "level": jnp.asarray(level + 1, jnp.int32),
+                }, level + 1)
+            if on_level is not None:
+                on_level(level + 1, forest)
 
-    if forest is None:              # max_depth == 0: root node only
-        forest = _stream_init(level_sweep(route=False), config)
+        if forest is None:          # max_depth == 0: root node only
+            forest = _stream_init(level_sweep(route=False), config)
+    finally:
+        feeder.close()
     return finalize_forest(forest)

@@ -57,8 +57,10 @@ def _shard_map(f, *, mesh, in_specs, out_specs):
 from .dsi import bootstrap_counts
 from .engine import (
     CollectivePlane, _gather_feature_bins, _safe_mean, finalize_forest, grow,
-    init_forest, next_frontier, plan_level, stream_block_step, write_level,
+    init_forest, init_growth_state, level_step, next_frontier, plan_level,
+    stream_block_step, write_level,
 )
+from .types import GrowthState
 from .gain import (
     SplitScores, level_scores, multiway_gain_ratio, resolve_split_backend,
 )
@@ -219,6 +221,121 @@ def _pad_rows(a: np.ndarray, pad: int, fill=0):
     return np.pad(a, width, constant_values=fill)
 
 
+def grow_sharded_checkpointed(
+    x_binned,
+    y: np.ndarray,
+    weights: np.ndarray,
+    config: ForestConfig,
+    mesh: Mesh,
+    feature_mask: Optional[np.ndarray] = None,
+    *,
+    sample_axes: Sequence[str] = ("data",),
+    feature_axis: str = "model",
+    manager=None,
+    resume_from: Optional[str] = None,
+    on_level=None,
+) -> Forest:
+    """Resident mesh growth with per-level checkpointing / crash resume.
+
+    The mesh analogue of ``engine.grow_checkpointed``: a host-driven
+    loop over ONE jitted ``shard_map`` call wrapping the engine's
+    ``level_step`` on ``MeshPlane`` — the identical traced level-step of
+    ``_grow_sharded``'s ``lax.while_loop``, so the forest is
+    bit-identical to the uninterrupted trainer. Between levels the full
+    ``GrowthState`` carry is handed to ``manager.maybe_save``; on
+    resume the carry is restored with its original mesh shardings (the
+    per-sample slot table goes back to ``P(None, sample_axes)``, the
+    rest replicated). Rows are padded to the data-axis size with
+    zero-weight samples, invisible to histograms and root counts.
+    """
+    sample_axes = tuple(sample_axes)
+    from .api import _channels
+
+    x_np = np.asarray(x_binned)
+    y_np = np.asarray(y)
+    w_np = np.asarray(weights, np.float32)
+    D = int(np.prod([mesh.shape[a] for a in sample_axes]))
+    pad = (-x_np.shape[0]) % D
+    k, F = config.n_trees, x_np.shape[1]
+
+    x_sh = NamedSharding(mesh, P(sample_axes, feature_axis))
+    row_sh = NamedSharding(mesh, P(sample_axes))
+    kn_sh = NamedSharding(mesh, P(None, sample_axes))
+
+    xb = jax.device_put(_pad_rows(x_np, pad), x_sh)
+    base_dev = _channels(jax.device_put(_pad_rows(y_np, pad), row_sh), config)
+    w_dev = jax.device_put(_pad_rows(w_np.T, pad).T, kn_sh)
+    mask_np = (
+        np.ones((k, F), bool) if feature_mask is None
+        else np.asarray(feature_mask, bool)
+    )
+    mask_dev = jax.device_put(mask_np, NamedSharding(mesh, P(None, feature_axis)))
+
+    def make_plane(mask_loc):
+        return MeshPlane(
+            config, mask_loc.shape[1], mask_loc,
+            sample_axes=sample_axes, feature_axis=feature_axis,
+        )
+
+    def init_kernel(base_loc, w_loc, mask_loc):
+        st = init_growth_state(base_loc, w_loc, config, make_plane(mask_loc))
+        return st.forest, st.slot_node, st.sample_slot, st.rng, st.level
+
+    state_specs = (P(), P(), P(None, sample_axes), P(), P())
+    init_fn = jax.jit(_shard_map(
+        init_kernel, mesh=mesh,
+        in_specs=(P(sample_axes), P(None, sample_axes), P(None, feature_axis)),
+        out_specs=state_specs,
+    ))
+
+    def step_kernel(xb_loc, base_loc, w_loc, mask_loc, forest, slot_node,
+                    slot_loc, rng, level):
+        st = level_step(
+            xb_loc, base_loc, w_loc,
+            GrowthState(
+                forest=forest, slot_node=slot_node, sample_slot=slot_loc,
+                rng=rng, level=level,
+            ),
+            config, make_plane(mask_loc),
+        )
+        return st.forest, st.slot_node, st.sample_slot, st.rng, st.level
+
+    step_fn = jax.jit(_shard_map(
+        step_kernel, mesh=mesh,
+        in_specs=(
+            P(sample_axes, feature_axis), P(sample_axes),
+            P(None, sample_axes), P(None, feature_axis),
+        ) + state_specs,
+        out_specs=state_specs,
+    ))
+
+    state = init_fn(base_dev, w_dev, mask_dev)
+    if resume_from is not None:
+        from ..checkpoint.checkpoint import latest_step, restore_checkpoint
+
+        if latest_step(resume_from) is not None:
+            shardings = jax.tree_util.tree_map(lambda a: a.sharding, state)
+            state, _ = restore_checkpoint(
+                state, resume_from, shardings=shardings
+            )
+    forest, slot_node, slot_loc, rng, level = state
+    while (
+        int(level) < config.max_depth
+        and bool(np.any(np.asarray(slot_node) >= 0))
+    ):
+        forest, slot_node, slot_loc, rng, level = step_fn(
+            xb, base_dev, w_dev, mask_dev,
+            forest, slot_node, slot_loc, rng, level,
+        )
+        if manager is not None:
+            manager.maybe_save(
+                (forest, slot_node, slot_loc, rng, level), int(level)
+            )
+        if on_level is not None:
+            on_level(int(level), forest)
+    return finalize_forest(forest)
+
+
 
 
 def grow_forest_streamed_sharded(
@@ -232,6 +349,10 @@ def grow_forest_streamed_sharded(
     sample_axes: Sequence[str] = ("data",),
     feature_axis: str = "model",
     prefetch: int = 2,
+    manager=None,
+    resume_from: Optional[str] = None,
+    on_level=None,
+    feeder_opts: Optional[dict] = None,
 ) -> Forest:
     """Out-of-core growth on the **mesh** plane — the streaming data
     plane composed with ``MeshPlane``'s collectives, lifting the
@@ -255,6 +376,14 @@ def grow_forest_streamed_sharded(
     histograms, routing, and root counts — so any block split shards.
     The result is bit-identical to resident ``_grow_sharded`` growth
     and to the local planes (the engine parity matrix).
+
+    **Checkpointing** mirrors ``grow_forest_streamed``: ``manager``
+    saves the driver's full inter-level carry (forest, frontier, level
+    plan, per-block slot tables) after each level; ``resume_from``
+    restores the latest carry — slot tables back to their
+    ``P(None, sample_axes)`` sharding — and the level loop continues
+    where it stopped, bit-identically. ``feeder_opts`` forwards
+    retry/backoff/fault-injection knobs to the ``BlockFeeder``.
     """
     from .api import _stream_setup
 
@@ -279,7 +408,7 @@ def grow_forest_streamed_sharded(
     pads = [(-n) % D for n in sizes]
     feeder = BlockFeeder(
         [_pad_rows(b, p) for b, p in zip(feeder0.blocks, pads)],
-        placement=x_sh, prefetch=prefetch,
+        placement=x_sh, prefetch=prefetch, **(feeder_opts or {}),
     )
 
     from .api import _channels
@@ -389,10 +518,31 @@ def grow_forest_streamed_sharded(
         jnp.zeros((D, k, S, F, B, C), jnp.float32),
         NamedSharding(mesh, hist_spec),
     )
-    slot_node = jax.device_put(
-        jnp.full((k, S), -1, jnp.int32).at[:, 0].set(0), rep_sh
-    )
-    forest, scores, split_rank = None, None, None
+
+    state = None
+    if resume_from is not None:
+        from ..checkpoint.checkpoint import latest_step, restore_checkpoint
+        from .api import _stream_state_like
+
+        if latest_step(resume_from) is not None:
+            like = _stream_state_like(
+                [n + p for n, p in zip(sizes, pads)], config
+            )
+            shardings = jax.tree_util.tree_map(lambda _: rep_sh, like)
+            shardings["slots"] = [kn_sh for _ in like["slots"]]
+            state, _ = restore_checkpoint(
+                like, resume_from, shardings=shardings
+            )
+    if state is not None:
+        forest, slot_node = state["forest"], state["slot_node"]
+        scores, split_rank = state["scores"], state["split_rank"]
+        slot_dev, start = list(state["slots"]), int(state["level"])
+    else:
+        slot_node = jax.device_put(
+            jnp.full((k, S), -1, jnp.int32).at[:, 0].set(0), rep_sh
+        )
+        forest, scores, split_rank = None, None, None
+        start = 0
 
     def level_sweep(route: bool):
         hist = hist0
@@ -408,35 +558,48 @@ def grow_forest_streamed_sharded(
                 )
         return hist
 
-    for level in range(config.max_depth):
-        if not np.any(np.asarray(slot_node) >= 0):
-            break
-        hist = level_sweep(route=level > 0)
-        plan = plan_next if forest is not None else plan_init
-        if forest is None:
-            forest = jax.device_put(init_forest(config), rep_sh)
-        forest, scores, split_rank, slot_node = plan(
-            hist, forest, slot_node, jnp.asarray(level, jnp.int32), mask_dev,
-        )
-
-    if forest is None:              # max_depth == 0: root node only
-        def root_kernel(hist_part):
-            plane = make_plane(hist_part.shape[3])
-            hist_c = plane.combine_hist(hist_part[0])
-            return hist_c[:, 0, 0].sum(axis=1)
-
-        root_fn = jax.jit(_shard_map(
-            root_kernel, mesh=mesh, in_specs=(hist_spec,), out_specs=P(),
-        ))
-        root = root_fn(level_sweep(route=False))
-        forest = init_forest(config)
-        forest = dataclasses.replace(
-            forest, class_counts=forest.class_counts.at[:, 0].set(root)
-        )
-        if config.regression:
-            forest = dataclasses.replace(
-                forest, value=forest.value.at[:, 0].set(_safe_mean(root))
+    try:
+        for level in range(start, config.max_depth):
+            if not np.any(np.asarray(slot_node) >= 0):
+                break
+            hist = level_sweep(route=level > 0)
+            plan = plan_next if forest is not None else plan_init
+            if forest is None:
+                forest = jax.device_put(init_forest(config), rep_sh)
+            forest, scores, split_rank, slot_node = plan(
+                hist, forest, slot_node, jnp.asarray(level, jnp.int32),
+                mask_dev,
             )
+            if manager is not None:
+                manager.maybe_save({
+                    "forest": forest, "slot_node": slot_node,
+                    "scores": scores, "split_rank": split_rank,
+                    "slots": slot_dev,
+                    "level": jnp.asarray(level + 1, jnp.int32),
+                }, level + 1)
+            if on_level is not None:
+                on_level(level + 1, forest)
+
+        if forest is None:          # max_depth == 0: root node only
+            def root_kernel(hist_part):
+                plane = make_plane(hist_part.shape[3])
+                hist_c = plane.combine_hist(hist_part[0])
+                return hist_c[:, 0, 0].sum(axis=1)
+
+            root_fn = jax.jit(_shard_map(
+                root_kernel, mesh=mesh, in_specs=(hist_spec,), out_specs=P(),
+            ))
+            root = root_fn(level_sweep(route=False))
+            forest = init_forest(config)
+            forest = dataclasses.replace(
+                forest, class_counts=forest.class_counts.at[:, 0].set(root)
+            )
+            if config.regression:
+                forest = dataclasses.replace(
+                    forest, value=forest.value.at[:, 0].set(_safe_mean(root))
+                )
+    finally:
+        feeder.close()
     return finalize_forest(forest)
 
 

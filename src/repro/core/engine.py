@@ -45,6 +45,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .gain import SplitScores, level_scores, node_counts, resolve_split_backend
 from .histograms import blocked_level_histograms, hist_feature_slab, level_histograms
@@ -507,6 +508,103 @@ def finalize_forest(forest: Forest) -> Forest:
 # ---------------------------------------------------------------------------
 
 
+def level_step(
+    x_binned: jnp.ndarray,
+    base_channels: jnp.ndarray,
+    weights: jnp.ndarray,
+    state: GrowthState,
+    config: ForestConfig,
+    plane: CollectivePlane,
+) -> GrowthState:
+    """ONE level of growth: task group -> plan -> write -> route ->
+    frontier, threaded through the ``GrowthState`` carry.
+
+    This is the body of ``grow``'s ``lax.while_loop`` AND the body of
+    the host-driven ``grow_checkpointed`` loop — the same traced
+    computation either way, so a run that checkpoints between levels
+    produces the bit-identical forest of an uninterrupted ``grow``.
+    """
+    scores, n_node = level_task_group(
+        x_binned, base_channels, weights, state.sample_slot,
+        state.slot_node, config, plane,
+    )
+    split_rank, is_split, child_base = plan_level(
+        scores, n_node, state.slot_node, config, state.level
+    )
+    forest = write_level(
+        state.forest, state.slot_node, split_rank, is_split, child_base,
+        scores, config,
+    )
+    sample_slot = route_level(
+        x_binned, state.sample_slot, split_rank, scores, plane
+    )
+    slot_node = next_frontier(is_split, child_base, config.frontier)
+    return GrowthState(
+        forest=forest,
+        slot_node=slot_node,
+        sample_slot=sample_slot,
+        rng=state.rng,
+        level=state.level + 1,
+    )
+
+
+def grow_checkpointed(
+    x_binned: jnp.ndarray,
+    base_channels: jnp.ndarray,
+    weights: jnp.ndarray,
+    config: ForestConfig,
+    plane: CollectivePlane,
+    *,
+    rng: Optional[jnp.ndarray] = None,
+    manager=None,
+    resume_from: Optional[str] = None,
+    on_level=None,
+) -> Forest:
+    """``grow`` with per-level ``GrowthState`` checkpointing.
+
+    A host-driven loop over the jitted ``level_step`` — each iteration
+    runs the identical traced level-step of the ``lax.while_loop``
+    engine, so the forest is bit-identical to ``grow`` on the same
+    plane. Between levels the full carry (forest, frontier, per-sample
+    slots, rng, level — everything a crash would lose) is handed to
+    ``manager.maybe_save`` (atomic-rename checkpoints,
+    ``checkpoint.CheckpointManager``); ``resume_from`` names a
+    checkpoint directory whose latest step restores the carry and
+    growth continues from the level after it. An empty/missing
+    ``resume_from`` directory falls back to a fresh start (the
+    ``ElasticRunner`` convention), so crash-retry supervisors need no
+    has-a-checkpoint-yet branch.
+
+    ``on_level(level, state)`` fires after each completed level (and
+    after its checkpoint, so a raise here models a crash at the level
+    boundary with the level's checkpoint already durable).
+    """
+    state = None
+    if resume_from is not None:
+        from ..checkpoint.checkpoint import latest_step, restore_checkpoint
+
+        if latest_step(resume_from) is not None:
+            like = init_growth_state(
+                base_channels, weights, config, plane, rng=rng
+            )
+            state, _ = restore_checkpoint(like, resume_from)
+    if state is None:
+        state = init_growth_state(base_channels, weights, config, plane, rng=rng)
+
+    step = jax.jit(
+        lambda xb, base, w, st: level_step(xb, base, w, st, config, plane)
+    )
+    while int(state.level) < config.max_depth and bool(
+        np.any(np.asarray(state.slot_node) >= 0)
+    ):
+        state = step(x_binned, base_channels, weights, state)
+        if manager is not None:
+            manager.maybe_save(state, int(state.level))
+        if on_level is not None:
+            on_level(int(state.level), state)
+    return finalize_forest(state.forest)
+
+
 def grow(
     x_binned: jnp.ndarray,        # [N, F] uint8 (local shard in distributed mode)
     base_channels: jnp.ndarray,   # [N, C]
@@ -534,28 +632,7 @@ def grow(
         return more
 
     def body(state: GrowthState) -> GrowthState:
-        scores, n_node = level_task_group(
-            x_binned, base_channels, weights, state.sample_slot,
-            state.slot_node, config, plane,
-        )
-        split_rank, is_split, child_base = plan_level(
-            scores, n_node, state.slot_node, config, state.level
-        )
-        forest = write_level(
-            state.forest, state.slot_node, split_rank, is_split, child_base,
-            scores, config,
-        )
-        sample_slot = route_level(
-            x_binned, state.sample_slot, split_rank, scores, plane
-        )
-        slot_node = next_frontier(is_split, child_base, config.frontier)
-        return GrowthState(
-            forest=forest,
-            slot_node=slot_node,
-            sample_slot=sample_slot,
-            rng=state.rng,
-            level=state.level + 1,
-        )
+        return level_step(x_binned, base_channels, weights, state, config, plane)
 
     state = jax.lax.while_loop(cond, body, state)
     return finalize_forest(state.forest)

@@ -24,7 +24,8 @@ import jax.numpy as jnp
 
 from .engine import (  # noqa: F401  (re-exported: training internals)
     LocalPlane, _gather_feature_bins, _rank_splits, _safe_mean,
-    chunked_level_scores, fused_level_scores, grow, init_forest,
+    chunked_level_scores, fused_level_scores, grow, grow_checkpointed,
+    init_forest,
 )
 from .histograms import class_channels, regression_channels
 from .types import Forest, ForestConfig
@@ -39,6 +40,36 @@ def grow_forest(
 ) -> Forest:
     """Train k trees level-synchronously. Pure function of its inputs."""
     return _grow_forest_impl(x_binned, y, weights, config, feature_mask)
+
+
+def grow_forest_checkpointed(
+    x_binned: jnp.ndarray,
+    y: jnp.ndarray,
+    weights: jnp.ndarray,
+    config: ForestConfig,
+    feature_mask: Optional[jnp.ndarray] = None,
+    *,
+    manager=None,
+    resume_from: Optional[str] = None,
+    on_level=None,
+) -> Forest:
+    """``grow_forest`` with per-level checkpointing / crash resume.
+
+    A host-driven loop over the engine's jitted ``level_step`` (see
+    ``engine.grow_checkpointed``): the forest is bit-identical to
+    ``grow_forest``, and a run restored from any level-boundary
+    checkpoint finishes with the same trees an uninterrupted run grows
+    (tests/test_fault.py kills it at every boundary to pin this).
+    """
+    base = (
+        regression_channels(y)
+        if config.regression
+        else class_channels(y, config.n_classes)
+    )
+    return grow_checkpointed(
+        x_binned, base, weights, config, LocalPlane(feature_mask),
+        manager=manager, resume_from=resume_from, on_level=on_level,
+    )
 
 
 @partial(jax.jit, static_argnames=("config",))

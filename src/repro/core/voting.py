@@ -73,16 +73,25 @@ def oob_r2(forest, x_binned, y, weights):
     target variance is zero (R^2 undefined; the clip used to hide the
     garbage ratio). Only a tree with real OOB evidence earns a
     non-neutral weight.
+
+    The sample reduction runs on HOST in float64 over per-sample f32
+    moment terms (``_r2_block_terms`` — the same jitted kernel the
+    streamed path folds per block), then one final float32 cast. That
+    makes ``oob_r2`` and ``oob_r2_streamed`` **bit-identical**: the
+    per-sample terms are batch-shape independent, and the float64
+    accumulations (one-shot pairwise here, Neumaier-compensated across
+    blocks there) agree to well under a float32 ulp before the cast.
     """
-    vals = predict_value_trees(forest, x_binned)           # [k, N]
-    oob = (weights == 0.0).astype(jnp.float32)
-    total = oob.sum(1)
-    n = jnp.maximum(total, 1.0)
-    err = jnp.sum(oob * (vals - y[None]) ** 2, axis=1) / n
-    mean = jnp.sum(oob * y[None], axis=1) / n
-    var = jnp.sum(oob * (y[None] - mean[:, None]) ** 2, axis=1) / n
-    r2 = jnp.clip(1.0 - err / jnp.maximum(var, 1e-38), 0.0, 1.0)
-    return jnp.where((total > 0) & (var > 0), r2, 0.5)
+    y32 = jnp.asarray(y, jnp.float32)
+    w32 = jnp.asarray(weights, jnp.float32)
+    sum_y, total = _r2_mean_stats(y32, w32)
+    mean = sum_y / jnp.maximum(total, 1.0)
+    err_t, var_t = _r2_block_terms(forest, x_binned, y32, w32, mean)
+    return _r2_finalize(
+        np.asarray(err_t, np.float64).sum(axis=1),
+        np.asarray(var_t, np.float64).sum(axis=1),
+        np.asarray(total, np.float64),
+    )
 
 
 def weighted_vote(
@@ -166,14 +175,15 @@ def oob_accuracy_streamed(
     correct = jnp.zeros((k,), jnp.float32)
     total = jnp.zeros((k,), jnp.float32)
     o = 0
-    for xb_b in feeder.sweep():
-        n = xb_b.shape[0]
-        c, t = _oob_block_counts(
-            forest, xb_b, feeder.pin(y_np[o:o + n]),
-            feeder.pin(w_np[:, o:o + n]),
-        )
-        correct, total = correct + c, total + t
-        o += n
+    with feeder:
+        for xb_b in feeder.sweep():
+            n = xb_b.shape[0]
+            c, t = _oob_block_counts(
+                forest, xb_b, feeder.pin(y_np[o:o + n]),
+                feeder.pin(w_np[:, o:o + n]),
+            )
+            correct, total = correct + c, total + t
+            o += n
     return jnp.where(total > 0, correct / jnp.maximum(total, 1.0), 0.5)
 
 
@@ -187,12 +197,41 @@ def _r2_mean_stats(y, w):
 
 
 @jax.jit
-def _r2_moment_block(forest: Forest, xb_b, y_b, w_b, mean):
+def _r2_block_terms(forest: Forest, xb_b, y_b, w_b, mean):
+    """Per-sample OOB squared-error / variance terms for one block,
+    [k, Nb] each. Tree traversal and the moment arithmetic are
+    per-sample elementwise, so each term is bit-identical whether the
+    block is the whole dataset or one slice of it — the same
+    batch-shape independence the streamed predict parity rests on. The
+    sample reduction deliberately does NOT happen on device: both
+    ``oob_r2`` paths reduce the terms on host in float64."""
     vals = predict_value_trees(forest, xb_b)               # [k, Nb]
     oob = (w_b == 0.0).astype(jnp.float32)
-    err = jnp.sum(oob * (vals - y_b[None]) ** 2, axis=1)
-    var = jnp.sum(oob * (y_b[None] - mean[:, None]) ** 2, axis=1)
-    return err, var
+    err_t = oob * (vals - y_b[None]) ** 2
+    var_t = oob * (y_b[None] - mean[:, None]) ** 2
+    return err_t, var_t
+
+
+def _neumaier_add(s: np.ndarray, c: np.ndarray, x: np.ndarray) -> None:
+    """One Neumaier-compensated accumulation step, in place: ``s += x``
+    with the rounding error banked in the running compensation ``c``
+    (all float64 [k]). The true sum is ``s + c``."""
+    t = s + x
+    c += np.where(np.abs(s) >= np.abs(x), (s - t) + x, (x - t) + s)
+    s[:] = t
+
+
+def _r2_finalize(err_sum, var_sum, total) -> jnp.ndarray:
+    """R^2 from the float64 moment sums (np.float64 [k] each): the
+    whole formula evaluates in float64, then ONE cast to float32 — the
+    only rounding either oob_r2 path performs after the per-sample
+    terms. Neutral prior 0.5 for degenerate OOB sets."""
+    n = np.maximum(total, 1.0)
+    err = err_sum / n
+    var = var_sum / n
+    r2 = np.clip(1.0 - err / np.maximum(var, 1e-300), 0.0, 1.0)
+    out = np.where((total > 0) & (var_sum > 0), r2, 0.5)
+    return jnp.asarray(out.astype(np.float32))
 
 
 def oob_r2_streamed(
@@ -201,10 +240,11 @@ def oob_r2_streamed(
 ) -> jnp.ndarray:
     """Blocked ``oob_r2``: ONE sweep over the feature blocks. The OOB
     mean needs only ``y``/``weights`` (computed with the resident
-    path's one-shot sums — no block feed), so only the centered-moment
-    pass streams the ``[Nb, F]`` blocks. Matches ``oob_r2`` to float
-    rounding (the moment pass's per-block partial sums reassociate the
-    sample reduction; OOB counts themselves are exact)."""
+    path's one-shot sums — no block feed), so only the moment pass
+    streams the ``[Nb, F]`` blocks. Per-block float64 partial sums are
+    folded with Neumaier compensation, so the result is
+    **bit-identical** to the resident ``oob_r2`` (see its docstring;
+    tests/test_engine.py pins the equality)."""
     y_np = np.asarray(y, dtype=np.float32)
     w_np = np.asarray(weights, dtype=np.float32)
     feeder = _block_feeder(
@@ -212,22 +252,25 @@ def oob_r2_streamed(
         n_y=y_np.shape[0], n_w=w_np.shape[1],
     )
     sum_y, total = _r2_mean_stats(jnp.asarray(y_np), jnp.asarray(w_np))
-    n = jnp.maximum(total, 1.0)
-    mean = sum_y / n
+    mean = sum_y / jnp.maximum(total, 1.0)
 
-    err_sum = var_sum = 0.0
+    k = w_np.shape[0]
+    err_sum, err_c = np.zeros(k, np.float64), np.zeros(k, np.float64)
+    var_sum, var_c = np.zeros(k, np.float64), np.zeros(k, np.float64)
     o = 0
-    for xb_b in feeder.sweep():
-        nb = xb_b.shape[0]
-        err, var = _r2_moment_block(
-            forest, xb_b, feeder.pin(y_np[o:o + nb]),
-            feeder.pin(w_np[:, o:o + nb]), mean,
-        )
-        err_sum, var_sum = err_sum + err, var_sum + var
-        o += nb
-    err, var = err_sum / n, var_sum / n
-    r2 = jnp.clip(1.0 - err / jnp.maximum(var, 1e-38), 0.0, 1.0)
-    return jnp.where((total > 0) & (var > 0), r2, 0.5)
+    with feeder:
+        for xb_b in feeder.sweep():
+            nb = xb_b.shape[0]
+            err_t, var_t = _r2_block_terms(
+                forest, xb_b, feeder.pin(y_np[o:o + nb]),
+                feeder.pin(w_np[:, o:o + nb]), mean,
+            )
+            _neumaier_add(err_sum, err_c, np.asarray(err_t, np.float64).sum(1))
+            _neumaier_add(var_sum, var_c, np.asarray(var_t, np.float64).sum(1))
+            o += nb
+    return _r2_finalize(
+        err_sum + err_c, var_sum + var_c, np.asarray(total, np.float64)
+    )
 
 
 def predict_scores_streamed(
@@ -240,10 +283,11 @@ def predict_scores_streamed(
     feeder = _block_feeder(
         x_binned, sample_block, prefetch, what="predict_scores_streamed"
     )
-    return jnp.concatenate([
-        predict_scores(forest, xb_b, backend=backend)
-        for xb_b in feeder.sweep()
-    ])
+    with feeder:
+        return jnp.concatenate([
+            predict_scores(forest, xb_b, backend=backend)
+            for xb_b in feeder.sweep()
+        ])
 
 
 def predict_streamed(
@@ -269,10 +313,11 @@ def predict_regression_streamed(
     feeder = _block_feeder(
         x_binned, sample_block, prefetch, what="predict_regression_streamed"
     )
-    num = jnp.concatenate([
-        predict_regression_scores(forest, xb_b, backend=backend)
-        for xb_b in feeder.sweep()
-    ])
+    with feeder:
+        num = jnp.concatenate([
+            predict_regression_scores(forest, xb_b, backend=backend)
+            for xb_b in feeder.sweep()
+        ])
     return num / jnp.maximum(_vote_weights(forest).sum(), 1e-38)
 
 

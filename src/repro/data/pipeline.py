@@ -13,7 +13,10 @@ from __future__ import annotations
 import dataclasses
 import queue
 import threading
-from typing import Any, Dict, Iterator, List, Optional, Sequence, Union
+import time
+from typing import (
+    Any, Callable, Dict, Iterator, List, Optional, Sequence, Tuple, Union,
+)
 
 import numpy as np
 
@@ -85,6 +88,92 @@ def stream_blocks(
     return blocks
 
 
+class FeedError(RuntimeError):
+    """A block feed failed permanently (retry budget exhausted, or a
+    non-retryable error)."""
+
+
+class _Sweep:
+    """One prefetching pass over a feeder's blocks.
+
+    A real iterator object (not a generator) so the background thread
+    has an owner with a deterministic ``close()``: a producer-side
+    exception is re-raised from the consumer's next ``__next__`` *after*
+    the thread is joined, and early consumer exit (``break``, an
+    exception in the loop body, or context-manager ``__exit__``) cancels
+    the producer, drains its in-flight device buffers, and joins —
+    never a leaked thread or a hung ``queue.put``.
+    """
+
+    def __init__(self, feeder: "BlockFeeder"):
+        self._feeder = feeder
+        self._q: "queue.Queue[Any]" = queue.Queue(maxsize=feeder.prefetch)
+        self._stop = object()
+        self._cancel = threading.Event()
+        self._closed = False
+        self._thread = threading.Thread(
+            target=self._produce, daemon=True, name="prf-block-feeder"
+        )
+        self._thread.start()
+
+    def _put_item(self, item) -> bool:
+        """Enqueue with cancel polling so a gone consumer can't wedge us."""
+        while not self._cancel.is_set():
+            try:
+                self._q.put(item, timeout=0.1)
+                return True
+            except queue.Full:
+                continue
+        return False
+
+    def _produce(self):
+        try:
+            for i, b in enumerate(self._feeder.blocks):
+                if self._cancel.is_set():
+                    return
+                if not self._put_item(self._feeder._put(b, f"block[{i}]")):
+                    return
+            self._put_item(self._stop)
+        except BaseException as e:  # re-raised on the consumer side
+            self._put_item(e)
+
+    def __iter__(self) -> "_Sweep":
+        return self
+
+    def __next__(self):
+        if self._closed:
+            raise StopIteration
+        item = self._q.get()
+        if item is self._stop:
+            self.close()
+            raise StopIteration
+        if isinstance(item, BaseException):
+            self.close()
+            raise item
+        return item
+
+    def close(self) -> None:
+        """Cancel the producer, drain queued buffers, join the thread."""
+        if self._closed:
+            return
+        self._closed = True
+        self._cancel.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=10)
+        self._feeder._sweeps.discard(self)
+
+    def __enter__(self) -> "_Sweep":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
+
+
 class BlockFeeder:
     """Async double-buffered host->device feed of the streaming data plane.
 
@@ -106,6 +195,21 @@ class BlockFeeder:
     a device for the single-host driver, or a ``NamedSharding`` so each
     mesh shard receives its (sample x feature) slice of every block
     (the mesh-streamed path, ``distributed.grow_forest_streamed_sharded``).
+
+    **Fault tolerance.** Every host->device transfer (``pin`` and each
+    sweep block) runs through a bounded retry loop: a ``retryable``
+    exception (default ``OSError`` — flaky memmap page-ins — and
+    ``RuntimeError``, which covers transient device_put failures and
+    ``launch.fault.SimulatedFailure``) is retried up to ``max_retries``
+    times with exponential backoff (``backoff * backoff_factor**i``,
+    capped at ``max_backoff`` seconds); exhaustion raises
+    :class:`FeedError` from the last error. ``fault_hook`` is a
+    deterministic chaos hook called before every transfer (see
+    ``launch.fault.FaultInjector``) so injected-failure tests are
+    reproducible. ``retries`` counts the retried attempts.
+
+    A feeder is a context manager: ``close()`` (or ``__exit__``) shuts
+    down any live sweep threads deterministically.
     """
 
     def __init__(
@@ -114,6 +218,12 @@ class BlockFeeder:
         *,
         placement: Any = None,
         prefetch: int = 2,
+        max_retries: int = 3,
+        backoff: float = 0.05,
+        backoff_factor: float = 2.0,
+        max_backoff: float = 2.0,
+        retryable: Tuple[type, ...] = (OSError, RuntimeError),
+        fault_hook: Optional[Callable[[str], None]] = None,
     ):
         self.blocks = list(blocks)
         if not self.blocks:
@@ -123,60 +233,75 @@ class BlockFeeder:
             )
         self.placement = placement
         self.prefetch = int(prefetch)
+        if max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got {max_retries}")
+        if backoff < 0 or max_backoff < 0 or backoff_factor < 1.0:
+            raise ValueError(
+                "backoff/max_backoff must be >= 0 and backoff_factor >= 1"
+            )
+        self.max_retries = int(max_retries)
+        self.backoff = float(backoff)
+        self.backoff_factor = float(backoff_factor)
+        self.max_backoff = float(max_backoff)
+        self.retryable = tuple(retryable)
+        self.fault_hook = fault_hook
+        self.retries = 0                     # total retried attempts
+        self._sweeps: set = set()
 
     def __len__(self) -> int:
         return len(self.blocks)
 
-    def pin(self, host_array):
-        """Pin one host array on device (respecting ``placement``)."""
+    def _put(self, host_array, site: str):
+        """One host->device transfer under the bounded retry policy."""
         import jax
 
-        if self.placement is None:
-            return jax.device_put(host_array)
-        return jax.device_put(host_array, self.placement)
+        attempt = 0
+        while True:
+            try:
+                if self.fault_hook is not None:
+                    self.fault_hook(site)
+                if self.placement is None:
+                    return jax.device_put(host_array)
+                return jax.device_put(host_array, self.placement)
+            except self.retryable as e:
+                attempt += 1
+                if attempt > self.max_retries:
+                    raise FeedError(
+                        f"feed of {site} failed permanently after "
+                        f"{self.max_retries} retries: {e}"
+                    ) from e
+                self.retries += 1
+                time.sleep(min(
+                    self.backoff * self.backoff_factor ** (attempt - 1),
+                    self.max_backoff,
+                ))
+
+    def pin(self, host_array):
+        """Pin one host array on device (respecting ``placement``)."""
+        return self._put(host_array, "pin")
 
     def sweep(self) -> Iterator[Any]:
         """Yield the blocks as device arrays, prefetch-deep."""
         if self.prefetch <= 0:
-            for b in self.blocks:
-                yield self.pin(b)
-            return
+            def sync():
+                for i, b in enumerate(self.blocks):
+                    yield self._put(b, f"block[{i}]")
+            return sync()
+        s = _Sweep(self)
+        self._sweeps.add(s)
+        return s
 
-        q: "queue.Queue[Any]" = queue.Queue(maxsize=self.prefetch)
-        stop = object()
-        cancel = threading.Event()
+    def close(self) -> None:
+        """Shut down any live sweep threads (idempotent)."""
+        for s in list(self._sweeps):
+            s.close()
 
-        def produce():
-            try:
-                for b in self.blocks:
-                    if cancel.is_set():
-                        return
-                    q.put(self.pin(b))
-                q.put(stop)
-            except BaseException as e:  # surfaced on the consumer side
-                q.put(e)
+    def __enter__(self) -> "BlockFeeder":
+        return self
 
-        t = threading.Thread(
-            target=produce, daemon=True, name="prf-block-feeder"
-        )
-        t.start()
-        try:
-            while True:
-                item = q.get()
-                if item is stop:
-                    break
-                if isinstance(item, BaseException):
-                    raise item
-                yield item
-        finally:
-            # Unblock the producer if the consumer stopped early.
-            cancel.set()
-            try:
-                while True:
-                    q.get_nowait()
-            except queue.Empty:
-                pass
-            t.join(timeout=10)
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
 
 
 @dataclasses.dataclass

@@ -22,6 +22,47 @@ class SimulatedFailure(RuntimeError):
     pass
 
 
+class FaultInjector:
+    """Deterministic, seeded fault injection for chaos tests.
+
+    A callable hook: each call draws from its own ``np.random.default_rng``
+    stream and raises :class:`SimulatedFailure` with probability
+    ``rate``. ``max_consecutive`` bounds failure streaks, so a consumer
+    with ``max_retries >= max_consecutive`` retries is *guaranteed* to
+    make progress — injected chaos can slow a run down but never starve
+    it, which is what lets property tests assert the trained model is
+    unchanged under any fault sequence. The draw stream advances
+    deterministically per call, so the same (seed, call sequence)
+    reproduces the same fault sequence exactly.
+    """
+
+    def __init__(self, rate: float, *, seed: int = 0, max_consecutive: int = 2):
+        if not 0.0 <= rate <= 1.0:
+            raise ValueError(f"rate must be in [0, 1], got {rate}")
+        if max_consecutive < 1:
+            raise ValueError("max_consecutive must be >= 1")
+        self.rate = rate
+        self.max_consecutive = max_consecutive
+        self._rng = np.random.default_rng(seed)
+        self._streak = 0
+        self.calls = 0
+        self.injected = 0
+
+    def __call__(self, site: str = "") -> None:
+        self.calls += 1
+        fail = (
+            self._streak < self.max_consecutive
+            and self._rng.random() < self.rate
+        )
+        if fail:
+            self._streak += 1
+            self.injected += 1
+            raise SimulatedFailure(
+                f"injected fault #{self.injected} at {site or 'unnamed site'}"
+            )
+        self._streak = 0
+
+
 @dataclasses.dataclass
 class StragglerMonitor:
     """Deadline-based slow-step detection (median * k rule).

@@ -2,10 +2,14 @@
 
 * ``serve_step``   -- LM prefill/decode step factories.
 * ``prf_service``  -- forest serving: bucketed batching, async
-  micro-batch aggregation, and tree-sharded multi-device voting on top
-  of the fused prediction path (``ForestConfig.predict_backend``).
+  micro-batch aggregation, tree-sharded multi-device voting on top of
+  the fused prediction path (``ForestConfig.predict_backend``), and the
+  hardening layer (typed shedding, circuit breaker, deterministic
+  shutdown, versioned hot-swap registry).
 """
 from .prf_service import (  # noqa: F401
-    PRFFuture, PRFService, bucket_size, make_sharded_vote_fn,
+    CircuitBreaker, CircuitOpenError, ModelRegistry, PRFFuture, PRFService,
+    ServiceClosedError, ServiceError, ServiceOverloaded, bucket_size,
+    make_sharded_vote_fn,
 )
 from .serve_step import make_serve_fns  # noqa: F401

@@ -27,11 +27,25 @@ fused traversal+voting path (``ForestConfig.predict_backend``):
   them (Eq. 9/10 is a sum over trees) — mirroring
   ``core/distributed``'s T_GR histogram combine, with O(N*C) words on
   the wire instead of O(k*N*C).
+
+* **Resilience** — overload is shed at admission with typed errors
+  (``max_queue_rows`` -> :class:`ServiceOverloaded`, a cheap queue-depth
+  check, never a forward pass); a per-service
+  :class:`CircuitBreaker` opens after consecutive model failures and
+  half-open-probes its way back (:class:`CircuitOpenError` while open —
+  queued requests are kept, new ones shed); ``shutdown()`` settles
+  every pending future deterministically (served on drain, rejected
+  with :class:`ServiceClosedError` on cancel); and
+  :class:`ModelRegistry` gives each published model version its own
+  bulkheaded service, hot-swapping versions with an atomic pointer
+  flip that drops zero in-flight futures (the old service drains with
+  the old model). tests/test_serving.py pins all of it.
 """
 from __future__ import annotations
 
 import threading
-from typing import List, Optional, Tuple
+import time
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -56,13 +70,103 @@ def bucket_size(n: int, *, min_bucket: int = 8, max_batch: int = 1024) -> int:
     return max(min_bucket, min(b, max_batch))
 
 
-class PRFFuture:
-    """Result handle for a queued request (resolved by ``drain``)."""
+class ServiceError(RuntimeError):
+    """Base class of the serving layer's typed rejections — a caller
+    catching it handles every fast-shed path (overload, open circuit,
+    shutdown) without also swallowing model/compiler failures."""
 
-    __slots__ = ("_value", "_done")
+
+class ServiceOverloaded(ServiceError):
+    """Admission control: the queue is at ``max_queue_rows``."""
+
+
+class CircuitOpenError(ServiceError):
+    """The service's circuit breaker is open (model keeps failing)."""
+
+
+class ServiceClosedError(ServiceError):
+    """The service was shut down (or the registry has no model)."""
+
+
+class CircuitBreaker:
+    """Per-service circuit breaker with half-open probing.
+
+    ``failure_threshold`` consecutive model failures open the circuit;
+    while open, ``allow()`` is False (callers shed with
+    :class:`CircuitOpenError` instead of burning a forward pass on a
+    broken model). After ``reset_timeout`` seconds ONE probe call is
+    let through (half-open): success closes the circuit, failure
+    re-opens it for another full timeout. ``clock`` is injectable so
+    tests drive the state machine without sleeping.
+    """
+
+    def __init__(
+        self,
+        failure_threshold: int = 5,
+        reset_timeout: float = 30.0,
+        *,
+        clock: Callable[[], float] = time.monotonic,
+    ):
+        if failure_threshold < 1:
+            raise ValueError("failure_threshold must be >= 1")
+        if reset_timeout < 0:
+            raise ValueError("reset_timeout must be >= 0")
+        self.failure_threshold = failure_threshold
+        self.reset_timeout = reset_timeout
+        self._clock = clock
+        self._lock = threading.Lock()
+        self._failures = 0
+        self._state = "closed"
+        self._opened_at = 0.0
+
+    @property
+    def state(self) -> str:
+        """"closed" | "open" | "half_open" (open, probe window reached).
+        A peek — never consumes the half-open probe."""
+        with self._lock:
+            if (
+                self._state == "open"
+                and self._clock() - self._opened_at >= self.reset_timeout
+            ):
+                return "half_open"
+            return self._state
+
+    def allow(self) -> bool:
+        """May a call proceed? Consumes the single half-open probe."""
+        with self._lock:
+            if self._state == "closed":
+                return True
+            if (
+                self._state == "open"
+                and self._clock() - self._opened_at >= self.reset_timeout
+            ):
+                self._state = "half_open"        # this call IS the probe
+                return True
+            return False          # open, or a half-open probe in flight
+
+    def record_success(self) -> None:
+        with self._lock:
+            self._failures = 0
+            self._state = "closed"
+
+    def record_failure(self) -> None:
+        with self._lock:
+            self._failures += 1
+            if self._state == "half_open" or self._failures >= self.failure_threshold:
+                self._state = "open"
+                self._opened_at = self._clock()
+
+
+class PRFFuture:
+    """Result handle for a queued request (settled by ``drain`` /
+    ``shutdown``): resolved with a value, or rejected with an exception
+    that ``result()`` re-raises."""
+
+    __slots__ = ("_value", "_exc", "_done")
 
     def __init__(self):
         self._value = None
+        self._exc = None
         self._done = False
 
     def done(self) -> bool:
@@ -71,10 +175,22 @@ class PRFFuture:
     def result(self) -> np.ndarray:
         if not self._done:
             raise RuntimeError("request not served yet — call drain()")
+        if self._exc is not None:
+            raise self._exc
         return self._value
+
+    def exception(self) -> Optional[BaseException]:
+        """The rejection, or None if resolved with a value."""
+        if not self._done:
+            raise RuntimeError("request not served yet — call drain()")
+        return self._exc
 
     def _resolve(self, value: np.ndarray) -> None:
         self._value = value
+        self._done = True
+
+    def _reject(self, exc: BaseException) -> None:
+        self._exc = exc
         self._done = True
 
 
@@ -94,6 +210,8 @@ class PRFService:
         max_batch: int = 1024,
         min_bucket: int = 8,
         backend: Optional[str] = None,
+        max_queue_rows: Optional[int] = None,
+        breaker: Optional[CircuitBreaker] = None,
     ):
         if max_batch & (max_batch - 1) or min_bucket & (min_bucket - 1):
             raise ValueError("max_batch and min_bucket must be powers of two")
@@ -101,11 +219,19 @@ class PRFService:
             raise ValueError(
                 f"min_bucket={min_bucket} must not exceed max_batch={max_batch}"
             )
+        if max_queue_rows is not None and max_queue_rows < 1:
+            raise ValueError("max_queue_rows must be >= 1")
         if backend is not None:
             model = model.with_predict_backend(backend)
         self.model = model
         self.max_batch = max_batch
         self.min_bucket = min_bucket
+        # Admission control: queue depth past which submit() sheds with
+        # ServiceOverloaded — a counter compare under the lock, so a
+        # saturated service rejects in O(1) instead of queueing without
+        # bound. None = unbounded (the pre-hardening behavior).
+        self.max_queue_rows = max_queue_rows
+        self.breaker = breaker if breaker is not None else CircuitBreaker()
         self._edges = jnp.asarray(model.bin_edges)
         self._n_features = int(np.asarray(model.bin_edges).shape[0])
         # One entry per request — a single list (under one lock) so the
@@ -113,8 +239,11 @@ class PRFService:
         self._queue: List[Tuple[np.ndarray, bool, PRFFuture]] = []
         self._queued_rows = 0
         self._lock = threading.Lock()
+        self._closed = False
         self._buckets_seen: set = set()
         self._requests_served = 0
+        self._requests_shed = 0
+        self._requests_cancelled = 0
 
         forest = model.forest
         cfg = forest.config
@@ -169,17 +298,37 @@ class PRFService:
     # -- direct (synchronous) path ---------------------------------------
 
     def predict(self, x: np.ndarray) -> np.ndarray:
-        """Predict labels/values for any batch size (bucketed + padded)."""
+        """Predict labels/values for any batch size (bucketed + padded).
+
+        The circuit breaker brackets the forward pass: while open it
+        sheds with :class:`CircuitOpenError` before any device work
+        (a ``drain`` hitting it keeps its requests queued for the next
+        probe); client-side :class:`ValueError`/``ServiceError`` never
+        count as model failures. Stateless, so it stays usable after
+        ``shutdown`` (only admission closes).
+        """
         squeeze = np.ndim(x) == 1
         x = self._validate(x)
-        # Bin once on device and keep it there: padding with jnp.pad
-        # avoids the device->host->device round-trip a numpy pad costs
-        # on every request.
-        xb = apply_bins(jnp.asarray(x), self._edges)
-        outs = []
-        for i in range(0, len(xb), self.max_batch):
-            outs.append(self._predict_bucketed(xb[i : i + self.max_batch]))
-        out = np.concatenate(outs, axis=0)
+        if not self.breaker.allow():
+            raise CircuitOpenError(
+                f"circuit open after repeated model failures; retrying in "
+                f"<= {self.breaker.reset_timeout:g}s"
+            )
+        try:
+            # Bin once on device and keep it there: padding with jnp.pad
+            # avoids the device->host->device round-trip a numpy pad
+            # costs on every request.
+            xb = apply_bins(jnp.asarray(x), self._edges)
+            outs = []
+            for i in range(0, len(xb), self.max_batch):
+                outs.append(self._predict_bucketed(xb[i : i + self.max_batch]))
+            out = np.concatenate(outs, axis=0)
+        except ServiceError:
+            raise
+        except Exception:
+            self.breaker.record_failure()
+            raise
+        self.breaker.record_success()
         return out[0] if squeeze else out
 
     def _predict_bucketed(self, xb: jnp.ndarray) -> np.ndarray:
@@ -198,11 +347,35 @@ class PRFService:
 
         Auto-drains when the aggregated queue reaches ``max_batch``
         rows, so a saturated queue costs one forward pass per batch.
+
+        Admission is the fast-shed point: a shut-down service raises
+        :class:`ServiceClosedError`, an open circuit
+        :class:`CircuitOpenError`, and a queue at ``max_queue_rows``
+        :class:`ServiceOverloaded` — all typed, all before the request
+        touches the queue, so accepted requests keep their bounded
+        one-forward-pass latency under overload.
         """
         single = np.ndim(x) == 1
         x = self._validate(x)
+        if self.breaker.state == "open":
+            with self._lock:
+                self._requests_shed += 1
+            raise CircuitOpenError(
+                "circuit open after repeated model failures; request shed"
+            )
         fut = PRFFuture()
         with self._lock:
+            if self._closed:
+                raise ServiceClosedError("submit on a shut-down service")
+            if (
+                self.max_queue_rows is not None
+                and self._queued_rows + len(x) > self.max_queue_rows
+            ):
+                self._requests_shed += 1
+                raise ServiceOverloaded(
+                    f"queue full: {self._queued_rows} rows pending, request "
+                    f"of {len(x)} exceeds max_queue_rows={self.max_queue_rows}"
+                )
             self._queue.append((x, single, fut))
             self._queued_rows += len(x)
             full = self._queued_rows >= self.max_batch
@@ -247,6 +420,37 @@ class PRFService:
         self._requests_served += served
         return served
 
+    def shutdown(self, drain: bool = True) -> int:
+        """Stop admission and settle every pending future.
+
+        After this, ``submit`` raises :class:`ServiceClosedError`.
+        With ``drain=True`` pending requests are served one last time
+        (this is how :class:`ModelRegistry` hot-swaps without dropping
+        an in-flight future); with ``drain=False`` — or if the final
+        drain itself fails — the remainder is rejected with
+        :class:`ServiceClosedError`, so every future is deterministically
+        ``done()`` either way. Returns the number of futures settled.
+        Idempotent; the direct ``predict`` path stays usable (it holds
+        no queue state).
+        """
+        with self._lock:
+            self._closed = True
+        settled = 0
+        if drain:
+            try:
+                settled = self.drain()
+            except Exception:
+                pass                  # failed drain re-queued — cancel below
+        with self._lock:
+            queue, self._queue, self._queued_rows = self._queue, [], 0
+        for (_, _, fut) in queue:
+            fut._reject(
+                ServiceClosedError("service shut down before request was served")
+            )
+        with self._lock:
+            self._requests_cancelled += len(queue)
+        return settled + len(queue)
+
     def stats(self) -> dict:
         """Serving counters — bounded-recompilation evidence included."""
         return {
@@ -255,8 +459,93 @@ class PRFService:
             - self.min_bucket.bit_length()
             + 1,
             "requests_served": self._requests_served,
+            "requests_shed": self._requests_shed,
+            "requests_cancelled": self._requests_cancelled,
+            "breaker_state": self.breaker.state,
+            "closed": self._closed,
             "pending": self.pending,
         }
+
+
+# ---------------------------------------------------------------------------
+# Versioned model registry: bulkheaded services, atomic hot-swap
+# ---------------------------------------------------------------------------
+
+
+class ModelRegistry:
+    """Versioned registry of :class:`PRFService` instances with atomic
+    hot-swap.
+
+    Every ``publish`` wraps its model in a **fresh** service — its own
+    queue, circuit breaker, and counters — so versions are bulkheaded:
+    a failing or breaker-open version cannot shed, block, or fail
+    requests of any other version. The live version is a single
+    reference flipped under a lock; readers grab it with one attribute
+    read, so a request routed to the old service the instant before a
+    flip simply completes against the old model — ``publish`` then
+    calls ``old.shutdown(drain=True)``, which serves (never drops) its
+    in-flight futures. tests/test_serving.py pins zero dropped futures
+    across a swap with a concurrent submitter.
+    """
+
+    def __init__(self, **service_opts):
+        self._service_opts = service_opts
+        self._lock = threading.Lock()
+        self._current: Optional[Tuple[int, PRFService]] = None
+        self._retired: Dict[int, PRFService] = {}
+        self._next_version = 1
+
+    def publish(self, model: PRFModel, **overrides) -> int:
+        """Swap in ``model`` (constructor kwargs: registry defaults +
+        ``overrides``). Returns its version number. The previous
+        version is drained (every pending future resolves against the
+        model it was submitted to) and closed to new submits."""
+        svc = PRFService(model, **{**self._service_opts, **overrides})
+        with self._lock:
+            version = self._next_version
+            self._next_version += 1
+            old = self._current
+            self._current = (version, svc)           # the atomic flip
+            if old is not None:
+                self._retired[old[0]] = old[1]
+        if old is not None:
+            old[1].shutdown(drain=True)
+        return version
+
+    @property
+    def service(self) -> PRFService:
+        """The live service (one reference read — safe vs. publish)."""
+        cur = self._current
+        if cur is None:
+            raise ServiceClosedError("no model published")
+        return cur[1]
+
+    @property
+    def version(self) -> int:
+        cur = self._current
+        if cur is None:
+            raise ServiceClosedError("no model published")
+        return cur[0]
+
+    # Thin delegation so callers can hold the registry, not a service
+    # reference that goes stale at the next publish.
+
+    def predict(self, x: np.ndarray) -> np.ndarray:
+        return self.service.predict(x)
+
+    def submit(self, x: np.ndarray) -> PRFFuture:
+        return self.service.submit(x)
+
+    def drain(self) -> int:
+        return self.service.drain()
+
+    def stats(self) -> dict:
+        return {"version": self.version, **self.service.stats()}
+
+    def shutdown(self, drain: bool = True) -> int:
+        """Shut down the live service (retired ones are already closed)."""
+        cur = self._current
+        return 0 if cur is None else cur[1].shutdown(drain=drain)
 
 
 # ---------------------------------------------------------------------------

@@ -1,10 +1,15 @@
-"""PRF serving layer: bucketing, micro-batch queue, sharded voting.
+"""PRF serving layer: bucketing, micro-batch queue, sharded voting,
+and the hardening layer.
 
 * bucketed prediction returns exactly the direct-model answer at every
   batch size 1..33 (padding rows can never leak into real scores);
 * the jit cache is bounded by the power-of-two bucket set;
 * the async queue preserves submission order and auto-drains at
   ``max_batch`` aggregated rows;
+* overload sheds with typed errors at admission, the circuit breaker
+  opens/half-open-probes/closes, ``shutdown`` settles every future
+  deterministically, and ``ModelRegistry`` hot-swaps versions without
+  dropping an in-flight future (bulkheaded per-version services);
 * the tree-sharded ``psum`` vote combine matches single-host prediction
   bit-for-bit on a CPU mesh (subprocess, so the multi-device XLA flag
   never leaks into other tests).
@@ -13,13 +18,17 @@ import json
 import subprocess
 import sys
 import textwrap
+import threading
 
 import numpy as np
 import pytest
 
 from repro.core import ForestConfig, train_prf
 from repro.data.tabular import make_classification, make_regression, train_test_split
-from repro.serving import PRFService, bucket_size
+from repro.serving import (
+    CircuitBreaker, CircuitOpenError, ModelRegistry, PRFService,
+    ServiceClosedError, ServiceError, ServiceOverloaded, bucket_size,
+)
 
 
 @pytest.fixture(scope="module")
@@ -165,6 +174,213 @@ def test_failed_drain_keeps_requests_queued(served_model, monkeypatch):
     assert svc.pending == 1 and not good.done()    # nothing lost
     assert svc.drain() == 1                        # retry succeeds
     np.testing.assert_array_equal(good.result(), model.predict(xte[:3]))
+
+
+# ---------------------------------------------------------------------------
+# Hardening: admission control, circuit breaker, shutdown, hot-swap
+# ---------------------------------------------------------------------------
+
+
+def _flaky_bucketed(monkeypatch, fail_when):
+    """Patch the forward pass INSIDE the breaker bracket: ``fail_when()``
+    True -> the model 'fails'; otherwise the real pass runs."""
+    real = PRFService._predict_bucketed
+
+    def patched(self, xb):
+        if fail_when():
+            raise RuntimeError("injected model failure")
+        return real(self, xb)
+
+    monkeypatch.setattr(PRFService, "_predict_bucketed", patched)
+
+
+def test_overload_sheds_with_typed_error(served_model):
+    model, xte = served_model
+    svc = PRFService(model, max_batch=64, max_queue_rows=10)
+    fut = svc.submit(xte[:6])
+    with pytest.raises(ServiceOverloaded):
+        svc.submit(xte[:6])                 # 6 + 6 > 10 -> shed at admission
+    with pytest.raises(ServiceError):       # typed: one except for all sheds
+        svc.submit(xte[:5])
+    assert svc.pending == 1                 # accepted request unaffected
+    svc.submit(xte[6:10])                   # 6 + 4 == 10 still admitted
+    svc.drain()
+    np.testing.assert_array_equal(fut.result(), model.predict(xte[:6]))
+    assert svc.stats()["requests_shed"] == 2
+
+
+def test_circuit_breaker_opens_sheds_and_recovers(served_model, monkeypatch):
+    """failure_threshold consecutive model failures open the circuit
+    (predict/submit shed with CircuitOpenError, no forward pass); after
+    reset_timeout a single half-open probe closes it again. The clock is
+    injected, so no sleeping."""
+    model, xte = served_model
+    now = [0.0]
+    br = CircuitBreaker(failure_threshold=2, reset_timeout=5.0,
+                        clock=lambda: now[0])
+    svc = PRFService(model, max_batch=64, breaker=br)
+    broken = [True]
+    _flaky_bucketed(monkeypatch, lambda: broken[0])
+
+    for _ in range(2):
+        with pytest.raises(RuntimeError, match="injected model failure"):
+            svc.predict(xte[:4])
+    assert br.state == "open"
+    with pytest.raises(CircuitOpenError):
+        svc.predict(xte[:4])
+    with pytest.raises(CircuitOpenError):
+        svc.submit(xte[:4])
+    assert svc.stats()["requests_shed"] == 1
+
+    now[0] = 6.0                            # past reset_timeout
+    assert br.state == "half_open"
+    broken[0] = False
+    out = svc.predict(xte[:4])              # the probe — succeeds, closes
+    assert br.state == "closed"
+    np.testing.assert_array_equal(out, model.predict(xte[:4]))
+
+
+def test_circuit_breaker_failed_probe_reopens(served_model, monkeypatch):
+    model, xte = served_model
+    now = [0.0]
+    br = CircuitBreaker(failure_threshold=1, reset_timeout=5.0,
+                        clock=lambda: now[0])
+    svc = PRFService(model, max_batch=64, breaker=br)
+    _flaky_bucketed(monkeypatch, lambda: True)
+    with pytest.raises(RuntimeError):
+        svc.predict(xte[:4])
+    assert br.state == "open"
+    now[0] = 6.0
+    with pytest.raises(RuntimeError):
+        svc.predict(xte[:4])                # the probe fails ...
+    assert br.state == "open"               # ... and re-opens immediately
+    now[0] = 7.0
+    with pytest.raises(CircuitOpenError):
+        svc.predict(xte[:4])                # new timeout window, shed again
+
+
+def test_drain_keeps_queue_while_circuit_open(served_model, monkeypatch):
+    """An open circuit fails drain WITHOUT losing the queued futures —
+    after recovery the same futures are served."""
+    model, xte = served_model
+    svc = PRFService(
+        model, max_batch=64,
+        breaker=CircuitBreaker(failure_threshold=1, reset_timeout=0.0),
+    )
+    fut = svc.submit(xte[:3])
+    broken = [True]
+    _flaky_bucketed(monkeypatch, lambda: broken[0])
+    with pytest.raises(RuntimeError):
+        svc.drain()                         # model failure opens the circuit
+    assert svc.pending == 1 and not fut.done()
+    broken[0] = False
+    assert svc.drain() == 1                 # reset_timeout=0: probe now
+    np.testing.assert_array_equal(fut.result(), model.predict(xte[:3]))
+
+
+def test_shutdown_drains_pending_futures(served_model):
+    model, xte = served_model
+    svc = PRFService(model, max_batch=64)
+    fa, fb = svc.submit(xte[0]), svc.submit(xte[1:4])
+    assert svc.shutdown(drain=True) == 2
+    assert fa.done() and fb.done()
+    assert fa.exception() is None and fb.exception() is None
+    np.testing.assert_array_equal(fb.result(), model.predict(xte[1:4]))
+    with pytest.raises(ServiceClosedError):
+        svc.submit(xte[:2])                 # admission closed
+    assert svc.shutdown() == 0              # idempotent
+    # the direct path holds no queue state and stays usable
+    np.testing.assert_array_equal(svc.predict(xte[:2]), model.predict(xte[:2]))
+
+
+def test_shutdown_cancel_rejects_futures_deterministically(served_model):
+    model, xte = served_model
+    svc = PRFService(model, max_batch=64)
+    fut = svc.submit(xte[:3])
+    assert svc.shutdown(drain=False) == 1
+    assert fut.done()
+    assert isinstance(fut.exception(), ServiceClosedError)
+    with pytest.raises(ServiceClosedError):
+        fut.result()
+    assert svc.stats()["requests_cancelled"] == 1
+
+
+def test_registry_hot_swap_drops_zero_futures(served_model):
+    """The atomic pointer flip: futures submitted before a publish are
+    drained against the model they were submitted to; requests after it
+    hit the new version. Nothing is ever left pending."""
+    model, xte = served_model
+    x, y = make_classification(n_samples=900, n_features=12, n_classes=3, seed=9)
+    model2 = train_prf(
+        x, y,
+        ForestConfig(n_trees=8, max_depth=4, n_bins=16, n_classes=3,
+                     feature_mode="all"),
+        seed=1,
+    )
+    reg = ModelRegistry(max_batch=256)
+    with pytest.raises(ServiceClosedError):
+        reg.predict(xte[:2])                # nothing published yet
+    assert reg.publish(model) == 1 and reg.version == 1
+    futs = [reg.submit(xte[i : i + 2]) for i in range(0, 10, 2)]
+    assert reg.publish(model2) == 2 and reg.version == 2
+    assert all(f.done() and f.exception() is None for f in futs), \
+        "hot swap dropped in-flight futures"
+    for i, f in enumerate(futs):            # answered by the OLD model
+        np.testing.assert_array_equal(
+            f.result(), model.predict(xte[2 * i : 2 * i + 2])
+        )
+    f_new = reg.submit(xte[:2])
+    reg.drain()
+    np.testing.assert_array_equal(f_new.result(), model2.predict(xte[:2]))
+
+
+def test_registry_hot_swap_with_concurrent_submitter(served_model):
+    """A submitter racing the publish: every future it gets back is
+    settled (served by old or new version), and sheds are typed."""
+    model, xte = served_model
+    reg = ModelRegistry(max_batch=256)
+    reg.publish(model)
+    futs, stop = [], threading.Event()
+
+    def submitter():
+        i = 0
+        while not stop.is_set():
+            try:
+                futs.append(reg.submit(xte[i % 64 : i % 64 + 2]))
+            except ServiceClosedError:
+                pass                        # raced the flip — typed, retried
+            i += 1
+
+    t = threading.Thread(target=submitter)
+    t.start()
+    try:
+        for _ in range(3):
+            reg.publish(model)
+    finally:
+        stop.set()
+        t.join(timeout=30)
+    assert not t.is_alive()
+    reg.drain()
+    assert all(f.done() for f in futs), "swap left futures pending"
+    assert all(f.exception() is None for f in futs)
+
+
+def test_registry_versions_are_bulkheaded(served_model):
+    """An open breaker on one version never touches another version —
+    each publish gets its own service, queue, and breaker."""
+    model, xte = served_model
+    reg = ModelRegistry(max_batch=64)
+    reg.publish(model)
+    old_breaker = reg.service.breaker
+    for _ in range(5):
+        old_breaker.record_failure()
+    assert old_breaker.state == "open"
+    reg.publish(model)                      # new version, fresh bulkhead
+    assert reg.service.breaker.state == "closed"
+    np.testing.assert_array_equal(reg.predict(xte[:4]), model.predict(xte[:4]))
+    assert old_breaker.state == "open"      # untouched
+    stats = reg.stats()
+    assert stats["version"] == 2 and stats["breaker_state"] == "closed"
 
 
 def test_sharded_vote_matches_single_host_bit_for_bit():
