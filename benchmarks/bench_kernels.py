@@ -207,6 +207,55 @@ def run_predict():
         "dropped_futures": sum(1 for f in futs if not f.done()),
         "swapped_to_version": reg.version,
     })
+
+    # serve_degraded: traffic during a live-version brownout. v2 is
+    # published and its breaker forced open; predict falls back to the
+    # retired-but-healthy v1 (us_per_call = that stale-fallback path).
+    # Before the brownout, one deadline'd request goes stale in the
+    # queue and one client overruns its token bucket — both rejected
+    # typed and counted, every admitted future settled (dropped must
+    # stay 0). The clock is injected: deadline/refill time is virtual.
+    from repro.serving import DeadlineExceeded, RateLimited, RateLimiter
+
+    tick = [0.0]
+    rl = RateLimiter(rate=1.0, burst=64, clock=lambda: tick[0])
+    reg2 = ModelRegistry(
+        max_batch=1024, min_bucket=8, rate_limiter=rl,
+        clock=lambda: tick[0],
+    )
+    reg2.publish(model)
+    reg2.predict(batch[:8])             # warm v1 (the future fallback)
+    reg2.publish(model)
+    reg2.predict(batch[:8])             # warm v2 (the live version)
+    futs2 = []
+    stale = reg2.submit(x[:8], client="lat", deadline=1.0)
+    futs2.append(stale)
+    tick[0] = 2.0                       # the deadline'd request goes stale
+    granted = rejected = 0
+    for j in range(9):                  # 9 x 8 rows vs a 64-token bucket
+        try:
+            futs2.append(reg2.submit(x[j * 8:(j + 1) * 8], client="hog"))
+            granted += 1
+        except RateLimited:
+            rejected += 1
+    reg2.drain()                        # settles stale + granted futures
+    assert isinstance(stale.exception(), DeadlineExceeded)
+    for _ in range(5):
+        reg2.service.breaker.record_failure()   # brownout: v2 opens
+    us_fb = _time(lambda: reg2.predict(batch[:8]))
+    h = reg2.health()
+    rows.append({
+        "bench": "serve_degraded",
+        "us_per_call": us_fb,
+        "derived": f"fallback=v1,live_breaker=open,req=8rows,{shape}",
+        "fallback_served": h["fallback_served"],
+        "deadline_exceeded": h["live"]["deadline_exceeded"],
+        "rate_limited": h["live"]["rate_limited"],
+        "rate_limit_granted": granted,
+        "rate_limit_rejected": rejected,
+        "dropped_futures": sum(1 for f in futs2 if not f.done()),
+        "live_us": us,                  # healthy serve_throughput path
+    })
     return rows
 
 

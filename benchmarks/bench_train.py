@@ -155,6 +155,31 @@ def run():
         "clean_us": us_streamed,
     })
 
+    # Per-block integrity validation (bad_block_policy) on the full
+    # streamed train_prf path: the numpy NaN/Inf/label screen runs once
+    # per raw block before binning, so its cost is a host-side preamble
+    # over the unvalidated run (``unvalidated_us``) — the price of
+    # refusing to train on poisoned shards.
+    from repro.core.api import train_prf
+
+    x_raw, y_raw = make_classification(
+        n_samples=N, n_features=F, n_classes=C, n_informative=8, seed=5
+    )
+    cfg_stream = dataclasses.replace(cfg, sample_block=N // N_BLOCKS)
+    us_unval = _time(lambda: train_prf(
+        x_raw, y_raw, cfg_stream, seed=0, bad_block_policy=None
+    ))
+    us_val = _time(lambda: train_prf(
+        x_raw, y_raw, cfg_stream, seed=0, bad_block_policy="raise"
+    ))
+    rows.append({
+        "bench": "train_validated_feed",
+        "us_per_call": us_val,
+        "derived": f"{SHAPE},blocks={N_BLOCKS},policy=raise",
+        "unvalidated_us": us_unval,
+        "overhead_frac": us_val / max(us_unval, 1e-9) - 1.0,
+    })
+
     forest = grow_forest(xb_dev, y_dev, w_dev, cfg)
     us_oob_res = _time(
         lambda: oob_accuracy(forest, xb_dev, y_dev, w_dev)

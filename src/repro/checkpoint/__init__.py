@@ -1,1 +1,10 @@
-from .checkpoint import CheckpointManager, restore_checkpoint, save_checkpoint  # noqa: F401
+from .checkpoint import (  # noqa: F401
+    CheckpointCorruptionError,
+    CheckpointManager,
+    latest_step,
+    list_steps,
+    restore_checkpoint,
+    restore_latest_valid,
+    save_checkpoint,
+    verify_checkpoint,
+)

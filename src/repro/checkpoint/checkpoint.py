@@ -1,26 +1,46 @@
 """Sharded checkpointing with elastic restore (fault-tolerance substrate).
 
 Format: one ``.npy`` file per pytree leaf inside a step directory, plus a
-msgpack manifest of paths/dtypes/shapes. Writes go to a temp dir and are
-atomically renamed — a crash mid-save never corrupts the latest
-checkpoint (the RDD-lineage replacement; see DESIGN.md §2).
+msgpack manifest of paths/dtypes/shapes **and per-leaf CRC32 checksums**.
+Writes go to a temp dir and are atomically renamed — a crash mid-save
+never corrupts the latest checkpoint (the RDD-lineage replacement; see
+DESIGN.md §2).
 
-Restore is *elastic*: leaves are loaded on host and ``device_put`` with
-the shardings derived for the *current* mesh, so a job can resume on a
-different pod count / mesh shape than it saved from. (At real scale the
-per-leaf files would be per-shard OCDBT streams; the protocol — manifest
-+ atomic rename + reshard-on-load — is the same.)
+Restore is *elastic* and *verified*: leaves are CRC/shape/dtype-checked
+against the manifest before they are trusted (a silently byte-flipped
+checkpoint raises :class:`CheckpointCorruptionError` instead of
+restoring garbage), then ``device_put`` with the shardings derived for
+the *current* mesh, so a job can resume on a different pod count / mesh
+shape than it saved from. ``restore_latest_valid`` walks back past
+corrupt or torn steps to the newest verifiable one — the resume paths
+of every growth driver use it, so a corrupted newest checkpoint costs
+one extra level of recompute, never a poisoned model. (At real scale
+the per-leaf files would be per-shard OCDBT streams; the protocol —
+checksummed manifest + atomic rename + reshard-on-load — is the same.)
 """
 from __future__ import annotations
 
 import os
+import re
 import shutil
 import tempfile
-from typing import Any, Callable, Optional
+import warnings
+import zlib
+from typing import Any, Callable, List, Optional, Tuple
 
 import jax
 import msgpack
 import numpy as np
+
+_STEP_RE = re.compile(r"^step_(\d{8})$")
+_TMP_PREFIX = ".tmp_save_"
+
+
+class CheckpointCorruptionError(RuntimeError):
+    """A checkpoint failed integrity verification: CRC mismatch,
+    shape/dtype drift, a missing or unreadable leaf file, or a torn
+    manifest. Raised *before* any corrupt bytes are deserialized into a
+    training state."""
 
 
 def _flatten(tree):
@@ -34,55 +54,138 @@ def _flatten(tree):
     return out, treedef
 
 
-def save_checkpoint(tree, directory: str, step: int) -> str:
-    """Atomic save. Returns the final checkpoint path."""
+def _crc32(arr: np.ndarray) -> int:
+    """CRC32 of an array's raw bytes (C-contiguous canonical form)."""
+    return zlib.crc32(np.ascontiguousarray(arr).data)
+
+
+def save_checkpoint(
+    tree, directory: str, step: int,
+    *,
+    fault_hook: Optional[Callable[[str], None]] = None,
+) -> str:
+    """Atomic save with a checksummed manifest. Returns the final path.
+
+    ``fault_hook`` is a deterministic chaos hook (see
+    ``launch.fault.FaultInjector``) called at ``"leaf[i]"`` before each
+    leaf write and at ``"pre_rename"`` between the complete tmp write
+    and the atomic rename — the torn-write window the recovery drill in
+    tests/test_integrity.py exercises.
+    """
     os.makedirs(directory, exist_ok=True)
     final = os.path.join(directory, f"step_{step:08d}")
-    tmp = tempfile.mkdtemp(dir=directory, prefix=".tmp_save_")
+    tmp = tempfile.mkdtemp(dir=directory, prefix=_TMP_PREFIX)
     flat, _ = _flatten(tree)
     manifest = {"step": step, "leaves": []}
     for i, (key, leaf) in enumerate(flat):
+        if fault_hook is not None:
+            fault_hook(f"leaf[{i}]")
         arr = np.asarray(leaf)
         fname = f"leaf_{i:05d}.npy"
         np.save(os.path.join(tmp, fname), arr)
-        manifest["leaves"].append(
-            {"key": key, "file": fname, "dtype": str(arr.dtype), "shape": list(arr.shape)}
-        )
+        manifest["leaves"].append({
+            "key": key, "file": fname, "dtype": str(arr.dtype),
+            "shape": list(arr.shape), "crc32": _crc32(arr),
+        })
     with open(os.path.join(tmp, "manifest.msgpack"), "wb") as f:
         f.write(msgpack.packb(manifest))
+    if fault_hook is not None:
+        fault_hook("pre_rename")
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)
     return final
 
 
-def latest_step(directory: str) -> Optional[int]:
+def list_steps(directory: str) -> List[int]:
+    """All step numbers in ``directory``, ascending. Stray files,
+    orphaned ``.tmp_save_*`` dirs from a killed atomic rename, and any
+    other non-``step_NNNNNNNN`` entries are ignored — a dirty directory
+    can never crash step discovery."""
     if not os.path.isdir(directory):
-        return None
-    steps = [
-        int(d.split("_")[1])
-        for d in os.listdir(directory)
-        if d.startswith("step_") and os.path.isdir(os.path.join(directory, d))
-    ]
-    return max(steps) if steps else None
+        return []
+    steps = []
+    for d in os.listdir(directory):
+        m = _STEP_RE.match(d)
+        if m and os.path.isdir(os.path.join(directory, d)):
+            steps.append(int(m.group(1)))
+    return sorted(steps)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    steps = list_steps(directory)
+    return steps[-1] if steps else None
+
+
+def _load_manifest(path: str) -> dict:
+    try:
+        with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
+            manifest = msgpack.unpackb(f.read())
+        if not isinstance(manifest, dict) or "leaves" not in manifest:
+            raise ValueError("manifest has no leaves")
+        return manifest
+    except CheckpointCorruptionError:
+        raise
+    except Exception as e:
+        raise CheckpointCorruptionError(
+            f"torn or unreadable manifest in {path}: {e}"
+        ) from e
+
+
+def _load_leaf(path: str, entry: dict) -> np.ndarray:
+    """Load + verify one leaf against its manifest entry."""
+    fname = entry["file"]
+    try:
+        arr = np.load(os.path.join(path, fname))
+    except Exception as e:
+        raise CheckpointCorruptionError(
+            f"leaf {entry['key']!r} ({fname}) in {path} is missing or "
+            f"unreadable: {e}"
+        ) from e
+    if list(arr.shape) != list(entry["shape"]) or str(arr.dtype) != entry["dtype"]:
+        raise CheckpointCorruptionError(
+            f"leaf {entry['key']!r} ({fname}) in {path} drifted: manifest "
+            f"says {entry['dtype']}{entry['shape']}, file holds "
+            f"{arr.dtype}{list(arr.shape)}"
+        )
+    want = entry.get("crc32")          # pre-integrity manifests lack it
+    if want is not None and _crc32(arr) != want:
+        raise CheckpointCorruptionError(
+            f"leaf {entry['key']!r} ({fname}) in {path} failed its CRC32 "
+            f"check — the checkpoint is corrupt"
+        )
+    return arr
+
+
+def verify_checkpoint(directory: str, step: int) -> None:
+    """Verify every leaf of one step against its manifest (CRC + shape +
+    dtype) without building a pytree. Raises
+    :class:`CheckpointCorruptionError` on the first failure."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    manifest = _load_manifest(path)
+    for entry in manifest["leaves"]:
+        _load_leaf(path, entry)
 
 
 def restore_checkpoint(
     tree_like, directory: str, step: Optional[int] = None,
-    shardings=None,
+    shardings=None, *, verify: bool = True,
 ):
     """Restore into the structure of `tree_like` (values ignored).
 
     `shardings`: optional matching pytree of Shardings — enables elastic
-    resume onto any mesh.
+    resume onto any mesh. With ``verify`` (the default) every leaf is
+    checked against the manifest's CRC32/shape/dtype before it is
+    deserialized onto a device; a failed check raises
+    :class:`CheckpointCorruptionError` (use ``restore_latest_valid`` to
+    fall back past corrupt steps automatically).
     """
     if step is None:
         step = latest_step(directory)
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {directory}")
     path = os.path.join(directory, f"step_{step:08d}")
-    with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
-        manifest = msgpack.unpackb(f.read())
+    manifest = _load_manifest(path)
 
     flat, treedef = _flatten(tree_like)
     by_key = {e["key"]: e for e in manifest["leaves"]}
@@ -92,8 +195,15 @@ def restore_checkpoint(
 
     leaves = []
     for i, (key, like) in enumerate(flat):
-        entry = by_key[key]
-        arr = np.load(os.path.join(path, entry["file"]))
+        entry = by_key.get(key)
+        if entry is None:
+            raise CheckpointCorruptionError(
+                f"leaf {key!r} missing from manifest in {path}"
+            )
+        if verify:
+            arr = _load_leaf(path, entry)
+        else:
+            arr = np.load(os.path.join(path, entry["file"]))
         if shard_flat is not None:
             leaves.append(jax.device_put(arr, shard_flat[i]))
         else:
@@ -101,29 +211,89 @@ def restore_checkpoint(
     return jax.tree_util.tree_unflatten(treedef, leaves), step
 
 
-class CheckpointManager:
-    """Rotating checkpoints + resume — the training loop's FT interface."""
+def restore_latest_valid(
+    tree_like, directory: str, shardings=None,
+    *,
+    on_skip: Optional[Callable[[int, Exception], None]] = None,
+) -> Optional[Tuple[Any, int]]:
+    """Restore the newest *verifiable* checkpoint, walking back past
+    corrupt or torn steps.
 
-    def __init__(self, directory: str, keep: int = 3, save_interval: int = 100):
+    Steps are tried newest-first; one that fails verification (CRC
+    mismatch, torn manifest, missing leaf, shape drift) is skipped with
+    a warning (and ``on_skip(step, error)``, if given) and the next
+    older step is tried. Returns ``(tree, step)`` of the first valid
+    one, or ``None`` when the directory holds no restorable checkpoint
+    at all — the resume paths treat that exactly like an empty
+    directory (fresh start), so a fully-corrupt checkpoint dir degrades
+    to a from-scratch retrain, never a crash loop or a poisoned model.
+    """
+    for step in reversed(list_steps(directory)):
+        try:
+            return restore_checkpoint(
+                tree_like, directory, step, shardings, verify=True
+            )
+        except (CheckpointCorruptionError, OSError, ValueError, KeyError) as e:
+            if on_skip is not None:
+                on_skip(step, e)
+            warnings.warn(
+                f"skipping corrupt checkpoint step {step} in {directory}: {e}",
+                RuntimeWarning,
+                stacklevel=2,
+            )
+    return None
+
+
+class CheckpointManager:
+    """Rotating checkpoints + resume — the training loop's FT interface.
+
+    Init garbage-collects orphaned ``.tmp_save_*`` dirs left behind by a
+    save killed between its tmp write and the atomic rename, so a
+    crash-retry supervisor never accumulates torn half-writes.
+    ``fault_hook`` forwards to :func:`save_checkpoint` for deterministic
+    torn-write drills.
+    """
+
+    def __init__(
+        self, directory: str, keep: int = 3, save_interval: int = 100,
+        *,
+        fault_hook: Optional[Callable[[str], None]] = None,
+    ):
         self.directory = directory
         self.keep = keep
         self.save_interval = save_interval
+        self.fault_hook = fault_hook
+        if os.path.isdir(directory):
+            for d in os.listdir(directory):
+                if d.startswith(_TMP_PREFIX):
+                    shutil.rmtree(
+                        os.path.join(directory, d), ignore_errors=True
+                    )
 
     def maybe_save(self, tree, step: int) -> Optional[str]:
         if step % self.save_interval != 0:
             return None
-        path = save_checkpoint(tree, self.directory, step)
+        path = save_checkpoint(
+            tree, self.directory, step, fault_hook=self.fault_hook
+        )
         self._gc()
         return path
 
     def _gc(self):
-        steps = sorted(
-            int(d.split("_")[1])
-            for d in os.listdir(self.directory)
-            if d.startswith("step_")
-        )
-        for s in steps[: -self.keep]:
+        for s in list_steps(self.directory)[: -self.keep]:
             shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"))
 
     def restore_latest(self, tree_like, shardings=None):
         return restore_checkpoint(tree_like, self.directory, shardings=shardings)
+
+    def restore_latest_valid(self, tree_like, shardings=None):
+        """Newest verifiable checkpoint as ``(tree, step)``; corrupt or
+        torn steps are skipped (see module-level
+        :func:`restore_latest_valid`). Raises ``FileNotFoundError`` when
+        no step verifies."""
+        out = restore_latest_valid(tree_like, self.directory, shardings)
+        if out is None:
+            raise FileNotFoundError(
+                f"no valid checkpoint in {self.directory}"
+            )
+        return out

@@ -49,10 +49,16 @@ class PRFModel:
     identical across backends. For serving (batch bucketing, request
     aggregation, tree-sharded multi-device voting) wrap the model in
     ``repro.serving.PRFService``.
+
+    ``quarantine`` is the data-integrity report of the training run
+    (``data.pipeline.QuarantineReport``) when ``train_prf`` ran with a
+    ``bad_block_policy``; ``None`` when validation was off. A clean
+    report (``quarantine.clean``) certifies validation changed nothing.
     """
 
     forest: Forest
     bin_edges: np.ndarray
+    quarantine: Optional[object] = None
 
     def _streams(self, x: np.ndarray) -> bool:
         """Out-of-core models (``config.sample_block > 0``) also predict
@@ -106,6 +112,7 @@ class PRFModel:
         return PRFModel(
             forest=dataclasses.replace(self.forest, config=cfg),
             bin_edges=self.bin_edges,
+            quarantine=self.quarantine,
         )
 
 
@@ -133,6 +140,7 @@ def train_prf(
     resume_from: Optional[str] = None,
     on_level=None,
     feeder_opts: Optional[dict] = None,
+    bad_block_policy: Optional[str] = "raise",
 ) -> PRFModel:
     """End-to-end PRF training on host data (paper §3 + §4 semantics).
 
@@ -157,7 +165,21 @@ def train_prf(
     so a crash-retry wrapper can always pass both knobs.
     ``on_level(level, _)`` fires after each completed (checkpointed)
     level; ``feeder_opts`` forwards retry/fault-injection knobs to the
-    streamed path's ``BlockFeeder``.
+    streamed path's ``BlockFeeder``. A corrupted or torn newest
+    checkpoint in ``resume_from`` is skipped (CRC-verified restore walks
+    back to the newest valid step) — resume still lands bit-identical.
+
+    **Data integrity.** ``bad_block_policy`` runs a deterministic
+    per-block validator (NaN/Inf cells, out-of-range labels, shape
+    drift) over the training source before anything is binned:
+    ``"raise"`` (default) fails fast with a typed ``DataIntegrityError``
+    naming the block and columns; ``"sanitize"`` deterministically
+    imputes (bad cells to bin 0, bad labels neutralized via zero DSI
+    weight and excluded from OOB); ``"quarantine"`` drops poisoned
+    blocks from every sweep (streamed path only — the resident dataset
+    is one block) and records them in ``model.quarantine``; ``None`` /
+    ``"off"`` disables validation. On clean data the returned model is
+    **bitwise identical** with validation on or off.
     """
     config = config.resolved(x.shape[1])
     if config.sample_block > 0:
@@ -167,15 +189,42 @@ def train_prf(
                 checkpoint_dir, checkpoint_every, checkpoint_keep
             ),
             resume_from=resume_from, on_level=on_level,
-            feeder_opts=feeder_opts,
+            feeder_opts=feeder_opts, bad_block_policy=bad_block_policy,
         )
+    report, cell_mask, label_mask = None, None, None
+    if bad_block_policy not in (None, "off"):
+        from ..data.pipeline import DataIntegrityError, screen_blocks
+
+        blocks1, y_clean, cmasks, lmasks, report = screen_blocks(
+            [np.asarray(x)], np.asarray(y), policy=bad_block_policy,
+            n_features=x.shape[1],
+            n_classes=None if config.regression else config.n_classes,
+            regression=config.regression,
+        )
+        if not report.clean:
+            if bad_block_policy == "quarantine":
+                raise DataIntegrityError(
+                    "bad_block_policy='quarantine' on the resident path "
+                    "would drop the entire dataset (it is a single block) "
+                    "— stream it with config.sample_block > 0, or use "
+                    "'sanitize'",
+                    block_index=0, reason="quarantine",
+                )
+            x, y = blocks1[0], y_clean
+            cell_mask, label_mask = cmasks.get(0), lmasks.get(0)
     xb_np, edges = bin_dataset(x, config.n_bins)
+    if cell_mask is not None:
+        xb_np = xb_np.copy()
+        xb_np[cell_mask] = 0                 # imputed cells -> bin 0
     xb = jnp.asarray(xb_np)
     y = jnp.asarray(y)
     key = jax.random.PRNGKey(seed)
     k_boot, k_dim = jax.random.split(key)
 
     weights = bootstrap_counts(k_boot, config.n_trees, x.shape[0])     # DSI §4.1.2
+    if label_mask is not None:
+        # Imputed-label samples get neutral (zero) weight in every tree.
+        weights = jnp.where(jnp.asarray(label_mask)[None, :], 0, weights)
 
     feature_mask = None
     if config.feature_mode == "importance" and not config.regression:
@@ -199,14 +248,23 @@ def train_prf(
         forest = grow_forest(xb, y_grow, weights, config, feature_mask)  # §4.2
 
     if config.weighted_voting:                                         # §3.3
+        xb_o, y_o, w_o = xb, y, weights
+        if label_mask is not None:
+            # Zero-weight == out-of-bag, so imputed-label samples would
+            # otherwise score every tree against a made-up label — drop
+            # them from the Eq. 8 evaluation entirely.
+            kidx = jnp.asarray(np.flatnonzero(~label_mask))
+            xb_o = jnp.take(xb, kidx, axis=0)
+            y_o = jnp.take(y, kidx, axis=0)
+            w_o = jnp.take(weights, kidx, axis=1)
         w = (
-            oob_r2(forest, xb, y.astype(jnp.float32), weights)
+            oob_r2(forest, xb_o, y_o.astype(jnp.float32), w_o)
             if config.regression
-            else oob_accuracy(forest, xb, y, weights)
+            else oob_accuracy(forest, xb_o, y_o, w_o)
         )
         forest = dataclasses.replace(forest, tree_weight=w)
 
-    return PRFModel(forest=forest, bin_edges=edges)
+    return PRFModel(forest=forest, bin_edges=edges, quarantine=report)
 
 
 # ---------------------------------------------------------------------------
@@ -229,6 +287,7 @@ def _train_prf_streamed(
     resume_from: Optional[str] = None,
     on_level=None,
     feeder_opts: Optional[dict] = None,
+    bad_block_policy: Optional[str] = "raise",
 ) -> PRFModel:
     """``train_prf`` over the streaming data plane (never re-validates
     shapes against a device-resident ``[N, F]`` matrix — there is none).
@@ -238,27 +297,92 @@ def _train_prf_streamed(
     RAM, nothing reaches a device). Everything downstream — the binned
     blocks, dimension reduction, growth, OOB weights, and the model's
     own predictions — moves per ``sample_block`` rows.
+
+    **Integrity screen.** With ``bad_block_policy`` set, every raw block
+    is validated *before* edge fitting (one NaN would otherwise poison
+    every ``np.quantile`` edge): sanitized cells are imputed then forced
+    to bin 0, sanitized labels get zero DSI weight and are excluded from
+    OOB, and quarantined blocks are excluded from edge fitting, dimred,
+    the growth sweep (the feeder never transfers them), and OOB — all
+    decided once, deterministically, so rerunning reproduces the same
+    model. When the screen finds nothing, every downstream input is the
+    untouched original — bitwise identical to validation off.
     """
     nb = config.sample_block
     N = x.shape[0]
-    edges = fit_bins(x, config.n_bins)
+    raw_blocks = [np.asarray(x[i:i + nb]) for i in range(0, N, nb)]
+    y_host = np.asarray(y)
+    report = None
+    cell_masks, label_masks = {}, {}
+    quar = frozenset()
+    if bad_block_policy not in (None, "off"):
+        from ..data.pipeline import DataIntegrityError, screen_blocks
+
+        raw_blocks, y_host, cell_masks, label_masks, report = screen_blocks(
+            raw_blocks, y_host, policy=bad_block_policy,
+            n_features=x.shape[1],
+            n_classes=None if config.regression else config.n_classes,
+            regression=config.regression,
+        )
+        quar = frozenset(report.quarantined)
+        if len(quar) == len(raw_blocks):
+            raise DataIntegrityError(
+                f"every block quarantined ({len(raw_blocks)} of "
+                f"{len(raw_blocks)}) — nothing left to train on",
+                reason="quarantine",
+            )
+    dirty = report is not None and not report.clean
+    good = [i for i in range(len(raw_blocks)) if i not in quar]
+
+    if dirty:
+        # Edges from screened data only — the clean branch keeps the
+        # original one-pass fit so clean runs stay bitwise unchanged.
+        edges = fit_bins(
+            np.concatenate([raw_blocks[i] for i in good]), config.n_bins
+        )
+    else:
+        edges = fit_bins(x, config.n_bins)
     edges_dev = jnp.asarray(edges)
     # Binned uint8 blocks stay HOST-resident (4-8x smaller than the raw
     # floats); each level sweep feeds them to the device one at a time.
-    xb_blocks = [
-        np.asarray(apply_bins(jnp.asarray(np.asarray(x[i:i + nb])), edges_dev))
-        for i in range(0, N, nb)
-    ]
-    y = jnp.asarray(y)
+    xb_blocks = []
+    for i, rb in enumerate(raw_blocks):
+        xb = np.asarray(apply_bins(jnp.asarray(rb), edges_dev))
+        if i in cell_masks:
+            xb = np.array(xb)
+            xb[cell_masks[i]] = 0            # imputed cells -> bin 0
+        xb_blocks.append(xb)
+    y = jnp.asarray(y_host)
     key = jax.random.PRNGKey(seed)
     k_boot, k_dim = jax.random.split(key)
 
     weights = bootstrap_counts(k_boot, config.n_trees, N)          # DSI §4.1.2
+    if label_masks:
+        # Imputed-label samples get neutral (zero) weight in every tree.
+        bad_rows = np.zeros(N, dtype=bool)
+        for i, m in label_masks.items():
+            bad_rows[i * nb:i * nb + m.shape[0]][m] = True
+        weights = jnp.where(jnp.asarray(bad_rows)[None, :], 0, weights)
+
+    def _drop_quarantined(blocks, y_dev, w_dev):
+        """Filter quarantined blocks out of a (blocks, y, weights) feed,
+        keeping labels/weights aligned with the surviving blocks."""
+        if not quar:
+            return blocks, y_dev, w_dev
+        ys = jnp.concatenate(
+            [y_dev[i * nb:i * nb + blocks[i].shape[0]] for i in good]
+        )
+        ws = jnp.concatenate(
+            [w_dev[:, i * nb:i * nb + blocks[i].shape[0]] for i in good],
+            axis=1,
+        )
+        return [blocks[i] for i in good], ys, ws
 
     feature_mask = None
     if config.feature_mode == "importance" and not config.regression:
+        dr_blocks, dr_y, dr_w = _drop_quarantined(xb_blocks, y, weights)
         feature_mask = dimension_reduction_streamed(                   # §3.2
-            xb_blocks, y, weights, config, k_dim
+            dr_blocks, dr_y, dr_w, config, k_dim
         )
     elif config.feature_mode == "random":
         feature_mask = random_feature_mask(
@@ -270,18 +394,48 @@ def _train_prf_streamed(
     forest = grow_forest_streamed(
         xb_blocks, y, weights, config, feature_mask,
         manager=checkpoint, resume_from=resume_from, on_level=on_level,
-        feeder_opts=feeder_opts,
+        feeder_opts=feeder_opts, quarantined=sorted(quar),
     )                                                                  # §4.2
 
     if config.weighted_voting:                                         # §3.3
-        w = (
-            oob_r2_streamed(forest, xb_blocks, y.astype(jnp.float32), weights)
-            if config.regression
-            else oob_accuracy_streamed(forest, xb_blocks, y, weights)
-        )
+        if dirty:
+            # OOB over surviving blocks and rows only: quarantined
+            # blocks are gone, and imputed-label rows (zero weight ==
+            # out-of-bag everywhere) must not score trees against a
+            # made-up label.
+            w_host = np.asarray(weights)
+            y_oob = y_host if not config.regression else \
+                y_host.astype(np.float32)
+            o_blocks, o_y, o_w = [], [], []
+            for i in good:
+                o0, n_i = i * nb, xb_blocks[i].shape[0]
+                keep = (
+                    ~label_masks[i] if i in label_masks
+                    else np.ones(n_i, dtype=bool)
+                )
+                if not keep.any():
+                    continue
+                o_blocks.append(xb_blocks[i][keep])
+                o_y.append(y_oob[o0:o0 + n_i][keep])
+                o_w.append(w_host[:, o0:o0 + n_i][:, keep])
+            oy = jnp.asarray(np.concatenate(o_y))
+            ow = jnp.asarray(np.concatenate(o_w, axis=1))
+            w = (
+                oob_r2_streamed(forest, o_blocks, oy.astype(jnp.float32), ow)
+                if config.regression
+                else oob_accuracy_streamed(forest, o_blocks, oy, ow)
+            )
+        else:
+            w = (
+                oob_r2_streamed(
+                    forest, xb_blocks, y.astype(jnp.float32), weights
+                )
+                if config.regression
+                else oob_accuracy_streamed(forest, xb_blocks, y, weights)
+            )
         forest = dataclasses.replace(forest, tree_weight=w)
 
-    return PRFModel(forest=forest, bin_edges=edges)
+    return PRFModel(forest=forest, bin_edges=edges, quarantine=report)
 
 
 @partial(jax.jit, static_argnames=("config",))
@@ -336,10 +490,13 @@ def _stream_plan_write(forest, slot_node, hist, feature_mask, level, config):
 def _stream_setup(
     x_binned, y, weights, config: ForestConfig, prefetch: int,
     feeder_opts: Optional[dict] = None,
+    quarantined: Sequence[int] = (),
 ):
     """Shared host-side setup of the streaming growth drivers: validated
     block list and a ``BlockFeeder`` over the blocks. ``feeder_opts``
-    forwards retry/backoff/fault-injection knobs to the feeder."""
+    forwards retry/backoff/fault-injection/validator knobs to the
+    feeder; ``quarantined`` block indices are dropped from every sweep
+    (never transferred to a device)."""
     from ..data.pipeline import BlockFeeder, stream_blocks
 
     y_np = np.asarray(y)
@@ -352,7 +509,10 @@ def _stream_setup(
     offsets = np.concatenate([[0], np.cumsum(sizes)])
     if config.regression:
         y_np = y_np.astype(np.float32)
-    feeder = BlockFeeder(blocks, prefetch=prefetch, **(feeder_opts or {}))
+    feeder = BlockFeeder(
+        blocks, prefetch=prefetch, quarantined=quarantined,
+        **(feeder_opts or {}),
+    )
     return feeder, y_np, w_np, sizes, offsets
 
 
@@ -392,6 +552,7 @@ def grow_forest_streamed(
     resume_from: Optional[str] = None,
     on_level=None,
     feeder_opts: Optional[dict] = None,
+    quarantined: Sequence[int] = (),
 ) -> Forest:
     """Out-of-core ``grow_forest`` over the async streaming data plane.
 
@@ -442,13 +603,23 @@ def grow_forest_streamed(
     **Checkpointing** mirrors ``grow_forest_checkpointed``: ``manager``
     saves the driver's full inter-level carry (forest, frontier, level
     plan, per-block slot tables — see ``_stream_state_like``) after
-    each level; ``resume_from`` restores the latest carry and the level
-    loop continues where it stopped, producing the bit-identical
-    forest. ``on_level(level, forest)`` fires after each completed
-    level's checkpoint.
+    each level; ``resume_from`` restores the newest *CRC-verified*
+    carry (``checkpoint.restore_latest_valid`` — a corrupted or torn
+    newest step is skipped, costing recompute of the affected levels,
+    never a poisoned model) and the level loop continues where it
+    stopped, producing the bit-identical forest.
+    ``on_level(level, forest)`` fires after each completed level's
+    checkpoint.
+
+    **Quarantine.** ``quarantined`` block indices (plus any the feeder's
+    own ``validator`` flags — forward one via ``feeder_opts``) are
+    dropped from every level sweep: never transferred, never routed,
+    never histogrammed. Their slot-table entries stay as zeros in the
+    checkpoint carry, so the carry structure — and therefore resume —
+    is independent of which blocks were quarantined.
     """
     feeder, y_np, w_np, sizes, offsets = _stream_setup(
-        x_binned, y, weights, config, prefetch, feeder_opts
+        x_binned, y, weights, config, prefetch, feeder_opts, quarantined
     )
 
     k, S = config.n_trees, config.frontier
@@ -458,20 +629,28 @@ def grow_forest_streamed(
     mask_dev = None if feature_mask is None else jnp.asarray(feature_mask)
 
     # Per-block constants: pinned on device ONCE for the whole growth.
+    # Quarantined blocks get no pins — nothing of theirs ever lands on
+    # a device.
+    live = set(feeder.live_blocks)
     base_dev, w_dev = [], []
     for i in range(len(feeder)):
+        if i not in live:
+            base_dev.append(None)
+            w_dev.append(None)
+            continue
         o0, o1 = offsets[i], offsets[i + 1]
         base_dev.append(_channels(feeder.pin(y_np[o0:o1]), config))
         w_dev.append(feeder.pin(w_np[:, o0:o1]))
 
     state = None
     if resume_from is not None:
-        from ..checkpoint.checkpoint import latest_step, restore_checkpoint
+        from ..checkpoint.checkpoint import restore_latest_valid
 
-        if latest_step(resume_from) is not None:
-            state, _ = restore_checkpoint(
-                _stream_state_like(sizes, config), resume_from
-            )
+        restored = restore_latest_valid(
+            _stream_state_like(sizes, config), resume_from
+        )
+        if restored is not None:
+            state, _ = restored
     if state is not None:
         forest, slot_node = state["forest"], state["slot_node"]
         scores, split_rank = state["scores"], state["split_rank"]
@@ -485,7 +664,7 @@ def grow_forest_streamed(
 
     def level_sweep(route: bool):
         hist = jnp.zeros((k, S, F, B, C), jnp.float32)
-        for i, xb_b in enumerate(feeder.sweep()):
+        for i, xb_b in zip(feeder.live_blocks, feeder.sweep()):
             hist, slot_dev[i] = _stream_block_step(
                 hist, xb_b, base_dev[i], w_dev[i], slot_dev[i], slot_node,
                 split_rank if route else None, scores if route else None,

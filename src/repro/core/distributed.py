@@ -311,13 +311,14 @@ def grow_sharded_checkpointed(
 
     state = init_fn(base_dev, w_dev, mask_dev)
     if resume_from is not None:
-        from ..checkpoint.checkpoint import latest_step, restore_checkpoint
+        from ..checkpoint.checkpoint import restore_latest_valid
 
-        if latest_step(resume_from) is not None:
-            shardings = jax.tree_util.tree_map(lambda a: a.sharding, state)
-            state, _ = restore_checkpoint(
-                state, resume_from, shardings=shardings
-            )
+        shardings = jax.tree_util.tree_map(lambda a: a.sharding, state)
+        restored = restore_latest_valid(
+            state, resume_from, shardings
+        )
+        if restored is not None:
+            state, _ = restored
     forest, slot_node, slot_loc, rng, level = state
     while (
         int(level) < config.max_depth
@@ -521,18 +522,17 @@ def grow_forest_streamed_sharded(
 
     state = None
     if resume_from is not None:
-        from ..checkpoint.checkpoint import latest_step, restore_checkpoint
+        from ..checkpoint.checkpoint import restore_latest_valid
         from .api import _stream_state_like
 
-        if latest_step(resume_from) is not None:
-            like = _stream_state_like(
-                [n + p for n, p in zip(sizes, pads)], config
-            )
-            shardings = jax.tree_util.tree_map(lambda _: rep_sh, like)
-            shardings["slots"] = [kn_sh for _ in like["slots"]]
-            state, _ = restore_checkpoint(
-                like, resume_from, shardings=shardings
-            )
+        like = _stream_state_like(
+            [n + p for n, p in zip(sizes, pads)], config
+        )
+        shardings = jax.tree_util.tree_map(lambda _: rep_sh, like)
+        shardings["slots"] = [kn_sh for _ in like["slots"]]
+        restored = restore_latest_valid(like, resume_from, shardings)
+        if restored is not None:
+            state, _ = restored
     if state is not None:
         forest, slot_node = state["forest"], state["slot_node"]
         scores, split_rank = state["scores"], state["split_rank"]

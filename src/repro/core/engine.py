@@ -569,10 +569,13 @@ def grow_checkpointed(
     slots, rng, level — everything a crash would lose) is handed to
     ``manager.maybe_save`` (atomic-rename checkpoints,
     ``checkpoint.CheckpointManager``); ``resume_from`` names a
-    checkpoint directory whose latest step restores the carry and
-    growth continues from the level after it. An empty/missing
-    ``resume_from`` directory falls back to a fresh start (the
-    ``ElasticRunner`` convention), so crash-retry supervisors need no
+    checkpoint directory whose newest *CRC-verified* step restores the
+    carry (``checkpoint.restore_latest_valid`` — corrupt or torn steps
+    are skipped, so a byte-flipped newest checkpoint costs one level of
+    recompute, never a poisoned carry) and growth continues from the
+    level after it. An empty/missing/fully-corrupt ``resume_from``
+    directory falls back to a fresh start (the ``ElasticRunner``
+    convention), so crash-retry supervisors need no
     has-a-checkpoint-yet branch.
 
     ``on_level(level, state)`` fires after each completed level (and
@@ -581,13 +584,14 @@ def grow_checkpointed(
     """
     state = None
     if resume_from is not None:
-        from ..checkpoint.checkpoint import latest_step, restore_checkpoint
+        from ..checkpoint.checkpoint import restore_latest_valid
 
-        if latest_step(resume_from) is not None:
-            like = init_growth_state(
-                base_channels, weights, config, plane, rng=rng
-            )
-            state, _ = restore_checkpoint(like, resume_from)
+        like = init_growth_state(
+            base_channels, weights, config, plane, rng=rng
+        )
+        restored = restore_latest_valid(like, resume_from)
+        if restored is not None:
+            state, _ = restored
     if state is None:
         state = init_growth_state(base_channels, weights, config, plane, rng=rng)
 

@@ -10,6 +10,7 @@ is not. DESIGN.md §4 describes the 1000+-node deployment story.
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from typing import Callable, Dict, List, Optional
 
@@ -20,6 +21,51 @@ from ..checkpoint.checkpoint import CheckpointManager, latest_step
 
 class SimulatedFailure(RuntimeError):
     pass
+
+
+class CheckpointCorruptor:
+    """Deterministic byte-flipper for checkpoint-corruption drills.
+
+    Flips ``n_bytes`` bytes (XOR 0xFF — every flip is guaranteed to
+    change the byte, so the leaf's CRC32 always catches it) at seeded
+    offsets inside one leaf file of a checkpoint step. File choice and
+    offsets come from ``np.random.default_rng(seed)`` over the *sorted*
+    file list, so the same (seed, directory contents) corrupts the same
+    bytes every run — chaos drills stay reproducible.
+    """
+
+    def __init__(self, *, seed: int = 0, n_bytes: int = 16):
+        if n_bytes < 1:
+            raise ValueError("n_bytes must be >= 1")
+        self._rng = np.random.default_rng(seed)
+        self.n_bytes = n_bytes
+
+    def corrupt(self, directory: str, step: Optional[int] = None) -> int:
+        """Corrupt one leaf file of `step` (default: the newest step).
+        Returns the step that was corrupted."""
+        from ..checkpoint.checkpoint import list_steps
+
+        if step is None:
+            steps = list_steps(directory)
+            if not steps:
+                raise FileNotFoundError(f"no checkpoints in {directory}")
+            step = steps[-1]
+        path = os.path.join(directory, f"step_{step:08d}")
+        files = sorted(
+            f for f in os.listdir(path) if f.endswith(".npy")
+        )
+        if not files:
+            raise FileNotFoundError(f"no leaf files in {path}")
+        target = os.path.join(path, files[int(self._rng.integers(len(files)))])
+        data = bytearray(open(target, "rb").read())
+        offsets = self._rng.integers(
+            0, len(data), size=min(self.n_bytes, len(data))
+        )
+        for off in offsets:
+            data[int(off)] ^= 0xFF
+        with open(target, "wb") as f:
+            f.write(bytes(data))
+        return step
 
 
 class FaultInjector:

@@ -3,13 +3,15 @@
 * ``serve_step``   -- LM prefill/decode step factories.
 * ``prf_service``  -- forest serving: bucketed batching, async
   micro-batch aggregation, tree-sharded multi-device voting on top of
-  the fused prediction path (``ForestConfig.predict_backend``), and the
+  the fused prediction path (``ForestConfig.predict_backend``), the
   hardening layer (typed shedding, circuit breaker, deterministic
-  shutdown, versioned hot-swap registry).
+  shutdown, versioned hot-swap registry), and degraded-mode operation
+  (per-request deadlines, per-client token-bucket rate limiting,
+  stale-fallback prediction, scrapeable ``health()`` snapshots).
 """
 from .prf_service import (  # noqa: F401
-    CircuitBreaker, CircuitOpenError, ModelRegistry, PRFFuture, PRFService,
-    ServiceClosedError, ServiceError, ServiceOverloaded, bucket_size,
-    make_sharded_vote_fn,
+    CircuitBreaker, CircuitOpenError, DeadlineExceeded, ModelRegistry,
+    PRFFuture, PRFService, RateLimited, RateLimiter, ServiceClosedError,
+    ServiceError, ServiceOverloaded, bucket_size, make_sharded_vote_fn,
 )
 from .serve_step import make_serve_fns  # noqa: F401

@@ -40,6 +40,15 @@ fused traversal+voting path (``ForestConfig.predict_backend``):
   bulkheaded service, hot-swapping versions with an atomic pointer
   flip that drops zero in-flight futures (the old service drains with
   the old model). tests/test_serving.py pins all of it.
+
+* **Degraded mode** — per-request deadlines bound queue staleness
+  (:class:`DeadlineExceeded`, settled through the future at drain); a
+  per-client token-bucket :class:`RateLimiter` sheds abusive clients in
+  front of admission control (:class:`RateLimited`); while the live
+  breaker is open, ``ModelRegistry.predict`` answers from the newest
+  *healthy* retired version (stale-but-correct beats erroring); and
+  ``health()`` exposes breaker / queue / shed / deadline / rate-limit /
+  quarantine counters as a flat snapshot a load balancer can scrape.
 """
 from __future__ import annotations
 
@@ -86,6 +95,70 @@ class CircuitOpenError(ServiceError):
 
 class ServiceClosedError(ServiceError):
     """The service was shut down (or the registry has no model)."""
+
+
+class DeadlineExceeded(ServiceError):
+    """The request's deadline expired before it was served. Settled
+    through the normal future path at drain time — a late future is
+    rejected, never silently dropped."""
+
+
+class RateLimited(ServiceError):
+    """The client's token bucket is empty (per-client rate limiting in
+    front of admission control)."""
+
+
+class RateLimiter:
+    """Per-client token-bucket rate limiter (cloud-patterns style).
+
+    Each client id owns a bucket holding up to ``burst`` tokens that
+    refills at ``rate`` tokens/second; a request for ``n`` rows is
+    admitted iff ``n`` tokens are available (and consumes them). Tokens
+    are charged per ROW, the same currency as ``max_queue_rows``, so
+    ``burst`` must cover a client's largest single request. Lazy refill
+    (computed from elapsed time at each call) keeps it O(1) per request
+    with no background thread; ``clock`` is injectable so tests drive
+    refills without sleeping.
+    """
+
+    def __init__(
+        self, rate: float, burst: float,
+        *,
+        clock: Callable[[], float] = time.monotonic,
+    ):
+        if rate <= 0:
+            raise ValueError(f"rate must be > 0 tokens/s, got {rate}")
+        if burst < 1:
+            raise ValueError(f"burst must be >= 1 token, got {burst}")
+        self.rate = float(rate)
+        self.burst = float(burst)
+        self._clock = clock
+        self._lock = threading.Lock()
+        self._buckets: Dict[str, Tuple[float, float]] = {}  # id -> (tokens, t)
+        self.granted = 0
+        self.rejected = 0
+
+    def allow(self, client: str = "", n: float = 1.0) -> bool:
+        """Take ``n`` tokens from ``client``'s bucket; False = shed."""
+        now = self._clock()
+        with self._lock:
+            tokens, last = self._buckets.get(client, (self.burst, now))
+            tokens = min(self.burst, tokens + (now - last) * self.rate)
+            if tokens >= n:
+                self._buckets[client] = (tokens - n, now)
+                self.granted += 1
+                return True
+            self._buckets[client] = (tokens, now)
+            self.rejected += 1
+            return False
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            return {
+                "rate": self.rate, "burst": self.burst,
+                "clients": len(self._buckets),
+                "granted": self.granted, "rejected": self.rejected,
+            }
 
 
 class CircuitBreaker:
@@ -212,6 +285,9 @@ class PRFService:
         backend: Optional[str] = None,
         max_queue_rows: Optional[int] = None,
         breaker: Optional[CircuitBreaker] = None,
+        rate_limiter: Optional[RateLimiter] = None,
+        default_deadline: Optional[float] = None,
+        clock: Callable[[], float] = time.monotonic,
     ):
         if max_batch & (max_batch - 1) or min_bucket & (min_bucket - 1):
             raise ValueError("max_batch and min_bucket must be powers of two")
@@ -232,11 +308,23 @@ class PRFService:
         # bound. None = unbounded (the pre-hardening behavior).
         self.max_queue_rows = max_queue_rows
         self.breaker = breaker if breaker is not None else CircuitBreaker()
+        # Degraded-mode knobs: a per-client token bucket sheds abusive
+        # traffic BEFORE the queue-depth check (RateLimited), and
+        # deadlines bound how stale a queued request may get before it
+        # is rejected instead of served (DeadlineExceeded at drain).
+        self.rate_limiter = rate_limiter
+        if default_deadline is not None and default_deadline <= 0:
+            raise ValueError("default_deadline must be > 0 seconds")
+        self.default_deadline = default_deadline
+        self._clock = clock
         self._edges = jnp.asarray(model.bin_edges)
         self._n_features = int(np.asarray(model.bin_edges).shape[0])
         # One entry per request — a single list (under one lock) so the
         # request order and its rows can never diverge across threads.
-        self._queue: List[Tuple[np.ndarray, bool, PRFFuture]] = []
+        # Entries: (x, single, future, absolute-deadline-or-None).
+        self._queue: List[
+            Tuple[np.ndarray, bool, PRFFuture, Optional[float]]
+        ] = []
         self._queued_rows = 0
         self._lock = threading.Lock()
         self._closed = False
@@ -244,6 +332,8 @@ class PRFService:
         self._requests_served = 0
         self._requests_shed = 0
         self._requests_cancelled = 0
+        self._requests_deadline_exceeded = 0
+        self._requests_rate_limited = 0
 
         forest = model.forest
         cfg = forest.config
@@ -342,7 +432,11 @@ class PRFService:
 
     # -- async micro-batch queue -----------------------------------------
 
-    def submit(self, x: np.ndarray) -> PRFFuture:
+    def submit(
+        self, x: np.ndarray, *,
+        client: str = "",
+        deadline: Optional[float] = None,
+    ) -> PRFFuture:
         """Enqueue a request; returns a future resolved by ``drain``.
 
         Auto-drains when the aggregated queue reaches ``max_batch``
@@ -350,10 +444,17 @@ class PRFService:
 
         Admission is the fast-shed point: a shut-down service raises
         :class:`ServiceClosedError`, an open circuit
-        :class:`CircuitOpenError`, and a queue at ``max_queue_rows``
-        :class:`ServiceOverloaded` — all typed, all before the request
-        touches the queue, so accepted requests keep their bounded
-        one-forward-pass latency under overload.
+        :class:`CircuitOpenError`, a drained token bucket
+        :class:`RateLimited` (per-``client``, charged by rows), and a
+        queue at ``max_queue_rows`` :class:`ServiceOverloaded` — all
+        typed, all before the request touches the queue, so accepted
+        requests keep their bounded one-forward-pass latency under
+        overload.
+
+        ``deadline`` (seconds from now; default ``default_deadline``)
+        bounds queue staleness: a request still queued when its deadline
+        passes is settled with :class:`DeadlineExceeded` at the next
+        drain — through the future, never dropped.
         """
         single = np.ndim(x) == 1
         x = self._validate(x)
@@ -363,6 +464,21 @@ class PRFService:
             raise CircuitOpenError(
                 "circuit open after repeated model failures; request shed"
             )
+        if self.rate_limiter is not None and not self.rate_limiter.allow(
+            client, n=len(x)
+        ):
+            with self._lock:
+                self._requests_rate_limited += 1
+            raise RateLimited(
+                f"client {client!r} exceeded its token bucket "
+                f"({self.rate_limiter.rate:g} rows/s, burst "
+                f"{self.rate_limiter.burst:g}) — request of {len(x)} shed"
+            )
+        if deadline is None:
+            deadline = self.default_deadline
+        elif deadline <= 0:
+            raise ValueError(f"deadline must be > 0 seconds, got {deadline}")
+        expires = None if deadline is None else self._clock() + deadline
         fut = PRFFuture()
         with self._lock:
             if self._closed:
@@ -376,7 +492,7 @@ class PRFService:
                     f"queue full: {self._queued_rows} rows pending, request "
                     f"of {len(x)} exceeds max_queue_rows={self.max_queue_rows}"
                 )
-            self._queue.append((x, single, fut))
+            self._queue.append((x, single, fut, expires))
             self._queued_rows += len(x)
             full = self._queued_rows >= self.max_batch
         if full:
@@ -389,10 +505,12 @@ class PRFService:
         return len(self._queue)
 
     def drain(self) -> int:
-        """Serve every queued request in one aggregated micro-batch.
+        """Settle every queued request: expired deadlines are rejected
+        (:class:`DeadlineExceeded`), the rest served in one aggregated
+        micro-batch.
 
         Resolves futures in submission order; returns the number of
-        requests served.
+        requests settled (served + deadline-rejected).
         """
         # Snapshot-and-clear under the lock, run the forward pass outside
         # it — concurrent submits keep aggregating into the NEXT batch
@@ -403,22 +521,35 @@ class PRFService:
                 return 0
             queue = self._queue
             self._queue, self._queued_rows = [], 0
+        now = self._clock()
+        live = [e for e in queue if e[3] is None or now <= e[3]]
+        expired = [e for e in queue if not (e[3] is None or now <= e[3])]
+        for (_, _, fut, dl) in expired:
+            fut._reject(DeadlineExceeded(
+                f"request expired {now - dl:.3f}s past its deadline while "
+                f"queued — shed at drain"
+            ))
+        if expired:
+            with self._lock:
+                self._requests_deadline_exceeded += len(expired)
+        if not live:
+            return len(expired)
         try:
-            out = self.predict(np.concatenate([x for x, _, _ in queue]))
+            out = self.predict(np.concatenate([x for x, _, _, _ in live]))
         except Exception:
             with self._lock:
-                self._queue = queue + self._queue
-                self._queued_rows += sum(len(x) for x, _, _ in queue)
+                self._queue = live + self._queue
+                self._queued_rows += sum(len(x) for x, _, _, _ in live)
             raise
         served = 0
         offset = 0
-        for (x, single, fut) in queue:
+        for (x, single, fut, _) in live:
             chunk = out[offset : offset + len(x)]
             fut._resolve(chunk[0] if single else chunk)
             offset += len(x)
             served += 1
         self._requests_served += served
-        return served
+        return served + len(expired)
 
     def shutdown(self, drain: bool = True) -> int:
         """Stop admission and settle every pending future.
@@ -443,7 +574,7 @@ class PRFService:
                 pass                  # failed drain re-queued — cancel below
         with self._lock:
             queue, self._queue, self._queued_rows = self._queue, [], 0
-        for (_, _, fut) in queue:
+        for (_, _, fut, _) in queue:
             fut._reject(
                 ServiceClosedError("service shut down before request was served")
             )
@@ -461,10 +592,42 @@ class PRFService:
             "requests_served": self._requests_served,
             "requests_shed": self._requests_shed,
             "requests_cancelled": self._requests_cancelled,
+            "requests_deadline_exceeded": self._requests_deadline_exceeded,
+            "requests_rate_limited": self._requests_rate_limited,
             "breaker_state": self.breaker.state,
             "closed": self._closed,
             "pending": self.pending,
         }
+
+    def health(self) -> dict:
+        """Scrapeable health snapshot for a load balancer / monitor.
+
+        Flat scalars: breaker state, queue depth (requests and rows),
+        the shed / deadline / rate-limit / cancel counters, and the
+        quarantined-block count of the model's training-time integrity
+        report (0 when validation was off or found nothing). One lock
+        acquisition; no device work.
+        """
+        q = self.model.quarantine
+        with self._lock:
+            snap = {
+                "breaker": self.breaker.state,
+                "closed": self._closed,
+                "queue_requests": len(self._queue),
+                "queue_rows": self._queued_rows,
+                "max_queue_rows": self.max_queue_rows,
+                "served": self._requests_served,
+                "shed": self._requests_shed,
+                "cancelled": self._requests_cancelled,
+                "deadline_exceeded": self._requests_deadline_exceeded,
+                "rate_limited": self._requests_rate_limited,
+                "quarantined_blocks": (
+                    0 if q is None else len(q.quarantined)
+                ),
+            }
+        if self.rate_limiter is not None:
+            snap["rate_limiter"] = self.rate_limiter.snapshot()
+        return snap
 
 
 # ---------------------------------------------------------------------------
@@ -494,6 +657,7 @@ class ModelRegistry:
         self._current: Optional[Tuple[int, PRFService]] = None
         self._retired: Dict[int, PRFService] = {}
         self._next_version = 1
+        self._fallback_served = 0
 
     def publish(self, model: PRFModel, **overrides) -> int:
         """Swap in ``model`` (constructor kwargs: registry defaults +
@@ -530,11 +694,37 @@ class ModelRegistry:
     # Thin delegation so callers can hold the registry, not a service
     # reference that goes stale at the next publish.
 
-    def predict(self, x: np.ndarray) -> np.ndarray:
-        return self.service.predict(x)
+    def _newest_healthy_retired(self) -> Optional[Tuple[int, PRFService]]:
+        """Newest retired version whose own breaker is not open (retired
+        services are closed for submit but their stateless ``predict``
+        stays fully usable — the degraded-mode fallback)."""
+        with self._lock:
+            candidates = sorted(self._retired.items(), reverse=True)
+        for version, svc in candidates:
+            if svc.breaker.state != "open":
+                return version, svc
+        return None
 
-    def submit(self, x: np.ndarray) -> PRFFuture:
-        return self.service.submit(x)
+    def predict(self, x: np.ndarray) -> np.ndarray:
+        """Predict against the live version; while its breaker is open,
+        fall back to the newest *healthy* retired version — a stale but
+        correct answer beats an error while the live model recovers.
+        With no healthy fallback the :class:`CircuitOpenError`
+        propagates. Fallback answers are counted in ``health()``
+        (``fallback_served``)."""
+        try:
+            return self.service.predict(x)
+        except CircuitOpenError:
+            fallback = self._newest_healthy_retired()
+            if fallback is None:
+                raise
+            out = fallback[1].predict(x)
+            with self._lock:
+                self._fallback_served += 1
+            return out
+
+    def submit(self, x: np.ndarray, **kwargs) -> PRFFuture:
+        return self.service.submit(x, **kwargs)
 
     def drain(self) -> int:
         return self.service.drain()
@@ -542,10 +732,41 @@ class ModelRegistry:
     def stats(self) -> dict:
         return {"version": self.version, **self.service.stats()}
 
-    def shutdown(self, drain: bool = True) -> int:
-        """Shut down the live service (retired ones are already closed)."""
+    def health(self) -> dict:
+        """Registry-level health: the live service's ``health()`` plus
+        version bookkeeping (live version, per-retired-version breaker
+        states, stale-fallback counter)."""
         cur = self._current
-        return 0 if cur is None else cur[1].shutdown(drain=drain)
+        with self._lock:
+            retired = {v: s.breaker.state for v, s in self._retired.items()}
+            snap = {
+                "fallback_served": self._fallback_served,
+                "retired": retired,
+            }
+        if cur is None:
+            snap.update({"version": None, "live": None})
+        else:
+            snap.update({"version": cur[0], "live": cur[1].health()})
+        return snap
+
+    def shutdown(self, drain: bool = True) -> int:
+        """Shut down the live service AND release every retired version.
+
+        Retired services were closed to new submits at publish time, but
+        the registry still held them (they back the stale-prediction
+        fallback), keeping their jit caches and queue state alive.
+        Shutdown settles the live queue (``drain``), re-runs the
+        (idempotent) shutdown of each retired service, and drops the
+        references so their compiled executables can be collected.
+        Returns the number of futures settled.
+        """
+        cur = self._current
+        settled = 0 if cur is None else cur[1].shutdown(drain=drain)
+        with self._lock:
+            retired, self._retired = self._retired, {}
+        for _, svc in sorted(retired.items()):
+            settled += svc.shutdown(drain=False)
+        return settled
 
 
 # ---------------------------------------------------------------------------

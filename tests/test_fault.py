@@ -20,6 +20,7 @@ import subprocess
 import sys
 import textwrap
 import threading
+import time
 
 import jax
 import numpy as np
@@ -274,6 +275,30 @@ def test_feeder_sweep_close_and_context_manager_join_thread():
         t.name == "prf-block-feeder" and t.is_alive()
         for t in threading.enumerate()
     ), "feeder thread leaked after close"
+
+
+def test_sweep_close_escalates_stuck_thread_to_feed_error():
+    """A producer thread that outlives ``join(join_timeout)`` is a
+    wedged device transfer — ``close()`` must escalate to ``FeedError``
+    naming the stuck feed site, never silently leak a live thread."""
+    blocks = [np.zeros((8, 2), np.uint8) for _ in range(3)]
+    feeder = BlockFeeder(blocks, prefetch=1, join_timeout=0.05)
+    sweep = feeder.sweep()
+    next(sweep)
+    # Swap in a producer that ignores cancellation (a hung device_put).
+    stuck = threading.Thread(
+        target=lambda: time.sleep(0.5), daemon=True, name="prf-block-feeder"
+    )
+    stuck.start()
+    sweep._thread = stuck
+    feeder._last_site = "block[1]"
+    with pytest.raises(FeedError, match=r"wedged at site 'block\[1\]'"):
+        sweep.close()
+    # The sweep deregistered itself before raising: feeder.close() is
+    # still safe, and once the transfer unwedges the thread is gone.
+    feeder.close()
+    stuck.join()
+    assert not stuck.is_alive()
 
 
 def test_feeder_retry_knobs_validated():

@@ -26,8 +26,9 @@ import pytest
 from repro.core import ForestConfig, train_prf
 from repro.data.tabular import make_classification, make_regression, train_test_split
 from repro.serving import (
-    CircuitBreaker, CircuitOpenError, ModelRegistry, PRFService,
-    ServiceClosedError, ServiceError, ServiceOverloaded, bucket_size,
+    CircuitBreaker, CircuitOpenError, DeadlineExceeded, ModelRegistry,
+    PRFService, RateLimited, RateLimiter, ServiceClosedError, ServiceError,
+    ServiceOverloaded, bucket_size,
 )
 
 
@@ -381,6 +382,168 @@ def test_registry_versions_are_bulkheaded(served_model):
     assert old_breaker.state == "open"      # untouched
     stats = reg.stats()
     assert stats["version"] == 2 and stats["breaker_state"] == "closed"
+
+
+# ---------------------------------------------------------------------------
+# Degraded mode: deadlines, rate limiting, stale fallback, health
+# ---------------------------------------------------------------------------
+
+
+def test_rate_limiter_refill_and_per_client_isolation():
+    now = [0.0]
+    rl = RateLimiter(rate=1.0, burst=2, clock=lambda: now[0])
+    assert rl.allow("a", n=2)                  # full burst
+    assert not rl.allow("a", n=1)              # bucket empty
+    assert rl.allow("b", n=2)                  # other client isolated
+    now[0] = 1.5                               # refill 1.5 tokens at 1/s
+    assert rl.allow("a", n=1)
+    assert not rl.allow("a", n=1)              # only 0.5 left
+    snap = rl.snapshot()
+    assert snap["granted"] == 3 and snap["rejected"] == 2
+    assert snap["clients"] == 2
+    with pytest.raises(ValueError):
+        RateLimiter(rate=0, burst=2)
+    with pytest.raises(ValueError):
+        RateLimiter(rate=1, burst=0.5)
+
+
+def test_submit_deadline_rejects_stale_requests(served_model):
+    """A request that outlives its deadline in the queue is settled with
+    DeadlineExceeded THROUGH its future at drain — never dropped, never
+    served stale. The clock is injected, so no sleeping."""
+    model, xte = served_model
+    now = [0.0]
+    svc = PRFService(model, max_batch=256, clock=lambda: now[0])
+    stale = svc.submit(xte[:3], deadline=5.0)
+    fresh = svc.submit(xte[3:6])               # no deadline: never expires
+    now[0] = 10.0
+    assert svc.drain() == 2                    # settled = served + expired
+    assert isinstance(stale.exception(), DeadlineExceeded)
+    with pytest.raises(DeadlineExceeded):
+        stale.result()
+    np.testing.assert_array_equal(fresh.result(), model.predict(xte[3:6]))
+    h = svc.health()
+    assert h["deadline_exceeded"] == 1 and h["served"] == 1
+    with pytest.raises(ValueError):
+        svc.submit(xte[:2], deadline=0)
+    with pytest.raises(ValueError):
+        PRFService(model, default_deadline=-1)
+
+
+def test_default_deadline_applies_to_every_submit(served_model):
+    model, xte = served_model
+    now = [0.0]
+    svc = PRFService(
+        model, max_batch=256, default_deadline=1.0, clock=lambda: now[0]
+    )
+    fut = svc.submit(xte[:2])
+    now[0] = 0.5
+    ok = svc.submit(xte[2:4])
+    now[0] = 1.2                               # first expired, second not
+    svc.drain()
+    assert isinstance(fut.exception(), DeadlineExceeded)
+    np.testing.assert_array_equal(ok.result(), model.predict(xte[2:4]))
+
+
+def test_rate_limited_submit_is_typed_and_counted(served_model):
+    model, xte = served_model
+    now = [0.0]
+    rl = RateLimiter(rate=1.0, burst=4, clock=lambda: now[0])
+    svc = PRFService(model, max_batch=256, rate_limiter=rl,
+                     clock=lambda: now[0])
+    fut = svc.submit(xte[:4], client="tenant-a")   # drains the burst
+    with pytest.raises(RateLimited):
+        svc.submit(xte[:1], client="tenant-a")     # shed BEFORE the queue
+    other = svc.submit(xte[4:6], client="tenant-b")
+    assert svc.pending == 2                        # shed request never queued
+    svc.drain()
+    np.testing.assert_array_equal(fut.result(), model.predict(xte[:4]))
+    assert other.exception() is None
+    h = svc.health()
+    assert h["rate_limited"] == 1
+    assert h["rate_limiter"]["rejected"] == 1
+    assert svc.stats()["requests_rate_limited"] == 1
+
+
+def test_health_snapshot_shape(served_model):
+    import dataclasses
+
+    from repro.data.pipeline import QuarantineReport
+
+    model, xte = served_model
+    svc = PRFService(model, max_batch=64, max_queue_rows=100)
+    svc.submit(xte[:3])
+    h = svc.health()
+    assert h["queue_requests"] == 1 and h["queue_rows"] == 3
+    assert h["max_queue_rows"] == 100
+    assert h["breaker"] == "closed" and not h["closed"]
+    assert h["quarantined_blocks"] == 0
+    assert "rate_limiter" not in h             # none configured
+    svc.drain()
+    assert svc.health()["queue_requests"] == 0
+    # a quarantine-trained model surfaces its report's block count
+    report = QuarantineReport(
+        policy="quarantine", blocks_checked=4, quarantined=[2]
+    )
+    qmodel = dataclasses.replace(model, quarantine=report)
+    assert PRFService(qmodel).health()["quarantined_blocks"] == 1
+
+
+def test_registry_falls_back_to_newest_healthy_retired(served_model):
+    """Live breaker open -> predict answers from the newest retired
+    version whose own breaker is healthy: stale-but-correct beats an
+    error while the live model recovers."""
+    model, xte = served_model
+    reg = ModelRegistry(max_batch=64)
+    reg.publish(model)                         # v1 -> retires
+    reg.publish(model)                         # v2 live
+    for _ in range(5):
+        reg.service.breaker.record_failure()
+    assert reg.service.breaker.state == "open"
+    got = reg.predict(xte[:6])                 # no error surfaces
+    np.testing.assert_array_equal(got, model.predict(xte[:6]))
+    h = reg.health()
+    assert h["fallback_served"] == 1
+    assert h["version"] == 2
+    assert h["retired"] == {1: "closed"}
+    assert h["live"]["breaker"] == "open"
+
+
+def test_registry_fallback_skips_open_retired_versions(served_model):
+    model, xte = served_model
+    reg = ModelRegistry(max_batch=64)
+    reg.publish(model)
+    svc1 = reg.service
+    reg.publish(model)
+    svc2 = reg.service
+    reg.publish(model)                         # v3 live; retired: v1, v2
+    for _ in range(5):
+        reg.service.breaker.record_failure()
+    for _ in range(5):
+        svc2.breaker.record_failure()          # newest retired also open
+    got = reg.predict(xte[:4])                 # falls through v2 to v1
+    np.testing.assert_array_equal(got, model.predict(xte[:4]))
+    assert reg.health()["retired"] == {1: "closed", 2: "open"}
+    assert reg.health()["fallback_served"] == 1
+    for _ in range(5):
+        svc1.breaker.record_failure()
+    with pytest.raises(CircuitOpenError):
+        reg.predict(xte[:4])                   # no healthy fallback left
+
+
+def test_registry_shutdown_releases_retired_versions(served_model):
+    model, xte = served_model
+    reg = ModelRegistry(max_batch=64)
+    reg.publish(model)
+    reg.publish(model)
+    fut = reg.submit(xte[:3])
+    assert reg.health()["retired"] == {1: "closed"}
+    assert reg.shutdown(drain=True) == 1       # the live future settles
+    assert fut.exception() is None
+    np.testing.assert_array_equal(fut.result(), model.predict(xte[:3]))
+    assert reg.health()["retired"] == {}       # retired released too
+    with pytest.raises(ServiceClosedError):
+        reg.submit(xte[:2])
 
 
 def test_sharded_vote_matches_single_host_bit_for_bit():
