@@ -259,9 +259,50 @@ def run_predict():
     return rows
 
 
+def run_binning():
+    """Bin-edge fitting: full-pass np.quantile vs the blocked sketch.
+
+    Tracks both wall time and **peak host allocation** (tracemalloc —
+    numpy registers its buffers with it): the exact path copies + sorts
+    the whole [N, F] source, the blocked path is O(block) + O(F * sketch)
+    no matter how large N grows. Same seed -> the blocked row also
+    reports its max edge deviation from exact.
+    """
+    import tracemalloc
+
+    from repro.core.binning import fit_bins, fit_bins_blocked
+
+    n_rows, n_feat, n_bins, block = 120_000, 64, 64, 8_192
+    x = np.random.default_rng(7).standard_normal(
+        (n_rows, n_feat), dtype=np.float32)
+    derived = f"N={n_rows},F={n_feat},B={n_bins}"
+
+    def _metered(fn):
+        tracemalloc.start()
+        t0 = time.time()
+        out = fn()
+        us = (time.time() - t0) * 1e6
+        _, peak = tracemalloc.get_traced_memory()
+        tracemalloc.stop()
+        return out, us, peak
+
+    exact, us_exact, peak_exact = _metered(lambda: fit_bins(x, n_bins))
+    blocks = [x[i:i + block] for i in range(0, n_rows, block)]
+    blocked, us_blocked, peak_blocked = _metered(
+        lambda: fit_bins_blocked(blocks, n_bins))
+    return [
+        {"bench": "fit_bins_exact", "us_per_call": us_exact,
+         "peak_bytes": int(peak_exact), "derived": derived},
+        {"bench": "fit_bins_blocked", "us_per_call": us_blocked,
+         "peak_bytes": int(peak_blocked),
+         "max_edge_err": float(np.max(np.abs(blocked - exact))),
+         "derived": f"{derived},block={block}"},
+    ]
+
+
 def run():
     rng = np.random.default_rng(0)
-    rows = run_level_hist() + run_level_scores() + run_predict()
+    rows = run_level_hist() + run_level_scores() + run_predict() + run_binning()
 
     N, F, S, B, C = 2048, 128, 4, 16, 4
     xb = jnp.asarray(rng.integers(0, B, (N, F)).astype(np.int32))

@@ -29,8 +29,10 @@ def main():
     import numpy as np
 
     from repro.core import ForestConfig
-    from repro.core.binning import apply_bins, bin_dataset
-    from repro.core.distributed import make_prf_train_fn, predict_sharded
+    from repro.core.binning import apply_bins
+    from repro.core.distributed import (
+        fit_bins_sharded, make_prf_train_fn, predict_sharded,
+    )
     from repro.data.tabular import make_classification, train_test_split
     from repro.launch.mesh import make_mesh
     from repro.roofline.analysis import analyze_hlo_text
@@ -38,10 +40,13 @@ def main():
     x, y = make_classification(n_samples=4096, n_features=64, n_classes=4, seed=1)
     xtr, ytr, xte, yte = train_test_split(x, y, 0.25, 0)
     cfg = ForestConfig(n_trees=args.trees, max_depth=6, n_bins=32, n_classes=4)
-    xb, edges = bin_dataset(xtr, cfg.n_bins)
 
     mesh = make_mesh((args.data, args.model), ("data", "model"))
     print(f"mesh: data={args.data} x model={args.model}")
+    # Bin edges from per-shard quantile sketches merged over the mesh —
+    # no single host ever takes a full pass over the raw source.
+    edges = fit_bins_sharded(xtr, cfg.n_bins, mesh, sample_block=512)
+    xb = np.asarray(apply_bins(jnp.asarray(xtr), jnp.asarray(edges)))
     train_fn, _ = make_prf_train_fn(cfg, mesh)
 
     n = (xb.shape[0] // args.data) * args.data

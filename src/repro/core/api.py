@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .binning import bin_dataset, apply_bins, fit_bins
+from .binning import bin_dataset, apply_bins, fit_bins, fit_bins_blocked
 from .dimred import (
     dimension_reduction, dimension_reduction_streamed, random_feature_mask,
 )
@@ -212,7 +212,23 @@ def train_prf(
                 )
             x, y = blocks1[0], y_clean
             cell_mask, label_mask = cmasks.get(0), lmasks.get(0)
-    xb_np, edges = bin_dataset(x, config.n_bins)
+    if config.resolved_bin_fit() == "blocked":
+        # Blocked edge fitting on the resident path (bin_fit="blocked"):
+        # same sketch as the streamed trainer, fed with views of x. The
+        # validator's imputed cells are excluded from the sketch rather
+        # than contributing their imputation constant.
+        from ..data.pipeline import sample_blocks
+
+        nb_fit = config.sample_block if config.sample_block > 0 else 65536
+        edges = fit_bins_blocked(
+            sample_blocks(x, nb_fit), config.n_bins,
+            exclude_masks=(
+                None if cell_mask is None else sample_blocks(cell_mask, nb_fit)
+            ),
+        )
+        xb_np = np.asarray(apply_bins(jnp.asarray(x), jnp.asarray(edges)))
+    else:
+        xb_np, edges = bin_dataset(x, config.n_bins)
     if cell_mask is not None:
         xb_np = xb_np.copy()
         xb_np[cell_mask] = 0                 # imputed cells -> bin 0
@@ -292,11 +308,14 @@ def _train_prf_streamed(
     """``train_prf`` over the streaming data plane (never re-validates
     shapes against a device-resident ``[N, F]`` matrix — there is none).
 
-    Binning edges are the one full-data pass left, and it is host-side
-    (``np.quantile`` over the raw source; a memmap pages through host
-    RAM, nothing reaches a device). Everything downstream — the binned
-    blocks, dimension reduction, growth, OOB weights, and the model's
-    own predictions — moves per ``sample_block`` rows.
+    Binning edges are fit out-of-core too (``bin_fit="auto"`` resolves
+    to the blocked path here): per-block sorted summaries merge in a
+    ``StreamingQuantileSketch``, so edge fitting costs O(block) +
+    O(F * sketch) host memory and never materializes the raw source —
+    bitwise identical to the resident ``np.quantile`` below the sketch's
+    compression threshold. Everything downstream — the binned blocks,
+    dimension reduction, growth, OOB weights, and the model's own
+    predictions — moves per ``sample_block`` rows.
 
     **Integrity screen.** With ``bad_block_policy`` set, every raw block
     is validated *before* edge fitting (one NaN would otherwise poison
@@ -334,9 +353,24 @@ def _train_prf_streamed(
     dirty = report is not None and not report.clean
     good = [i for i in range(len(raw_blocks)) if i not in quar]
 
-    if dirty:
-        # Edges from screened data only — the clean branch keeps the
-        # original one-pass fit so clean runs stay bitwise unchanged.
+    if config.resolved_bin_fit() == "blocked":
+        # Out-of-core edge fitting (the default whenever sample_block > 0):
+        # per-block sorted summaries merged in a StreamingQuantileSketch —
+        # O(block) + O(F * sketch) host memory, never a full pass over the
+        # raw source. Quarantined blocks never enter the sketch, and
+        # sanitized blocks contribute only their finite original cells
+        # (the validator's imputed-cell masks become exclusion masks
+        # instead of a full np.concatenate of the good blocks).
+        edges = fit_bins_blocked(
+            (raw_blocks[i] for i in good), config.n_bins,
+            exclude_masks={
+                j: cell_masks[i] for j, i in enumerate(good) if i in cell_masks
+            },
+        )
+    elif dirty:
+        # bin_fit="exact" on dirty data: edges from screened data only —
+        # this is the one remaining full-pass concatenate, kept verbatim
+        # for strict compatibility with the pre-sketch behavior.
         edges = fit_bins(
             np.concatenate([raw_blocks[i] for i in good]), config.n_bins
         )

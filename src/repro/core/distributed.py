@@ -891,3 +891,104 @@ def predict_sharded(forest: Forest, x_binned, mesh, *,
         out_specs=P(sample_axes),
     )
     return jax.jit(fn)(x_binned)
+
+
+# ---------------------------------------------------------------------------
+# Distributed bin-edge fitting (blocked quantile sketch over the mesh)
+# ---------------------------------------------------------------------------
+
+
+def fit_bins_sharded(
+    x,
+    n_bins: int,
+    mesh: Mesh,
+    *,
+    sample_block: int,
+    sample_axes: Sequence[str] = ("data",),
+    max_size: Optional[int] = None,
+    exclude_masks=None,
+) -> np.ndarray:
+    """Distributed bin-edge fitting: one quantile sketch per data shard,
+    exchanged through the collective plane, merged host-side.
+
+    The block list (``sample_blocks`` views of the source — typically an
+    ``np.memmap``) is partitioned contiguously over the ``sample_axes``
+    shards; each shard folds only its own blocks into a
+    ``StreamingQuantileSketch``, so per-shard memory stays O(block) +
+    O(F * max_size) — in a multi-process mesh each host would feed its
+    local shard of the file. The per-feature summaries then cross the
+    mesh as raw float64 **bit patterns** (uint32 words) through one
+    ``all_gather`` over ``sample_axes`` — exact regardless of jax's x64
+    mode — and are merged in shard order on the host. The result is
+    deterministic, and while every summary is uncompressed it is bitwise
+    identical to single-host ``fit_bins_blocked`` over the same blocks
+    (and therefore to the resident ``fit_bins`` at that scale). Wire
+    cost: ``D * F * 2 * max_size * 16`` bytes on the gather.
+
+    ``exclude_masks`` (sequence or dict keyed by global block index)
+    carries the validator's imputed-cell masks, exactly as in
+    ``fit_bins_blocked``. Per-shard sample counts and compression flags
+    are host-side bookkeeping only — edges depend solely on the gathered
+    summaries.
+    """
+    from ..data.pipeline import stream_blocks
+    from .binning import (
+        DEFAULT_SKETCH_SIZE, StreamingQuantileSketch, validate_n_bins,
+    )
+
+    n_bins = validate_n_bins(n_bins)
+    if max_size is None:
+        max_size = DEFAULT_SKETCH_SIZE
+    blocks = stream_blocks(x, sample_block, what="fit_bins_sharded")
+    n_features = int(np.asarray(blocks[0]).shape[1])
+    axes = tuple(sample_axes)
+    n_shards = 1
+    for a in axes:
+        n_shards *= int(mesh.shape[a])
+    parts = np.array_split(np.arange(len(blocks)), n_shards)
+
+    # Summaries never exceed 2 * max_size points (the sketch recompresses
+    # past that), so every shard ships the same fixed-width payload.
+    width = 2 * max_size
+    payloads = np.zeros((n_shards, n_features, width, 4), np.uint32)
+    states = []
+    for d in range(n_shards):
+        sk = StreamingQuantileSketch(n_features, max_size=max_size)
+        for i in parts[d]:
+            i = int(i)
+            if exclude_masks is None:
+                mask = None
+            elif isinstance(exclude_masks, dict):
+                mask = exclude_masks.get(i)
+            else:
+                mask = exclude_masks[i]
+            sk.update(np.asarray(blocks[i]), exclude=mask)
+        st = sk.state(pad_to=width)
+        packed = np.ascontiguousarray(
+            np.stack([st["values"], st["weights"]], axis=-1)
+        )  # [F, width, 2] float64
+        payloads[d] = packed.view(np.uint32).reshape(n_features, width, 4)
+        states.append(st)
+
+    def _exchange(p_loc):
+        g = p_loc  # [1, F, width, 4] per shard
+        for a in reversed(axes):
+            g = jax.lax.all_gather(g, a, axis=0, tiled=True)
+        return g
+
+    gathered = jax.jit(_shard_map(
+        _exchange, mesh=mesh,
+        in_specs=(P(axes),),
+        out_specs=P(),
+    ))(jnp.asarray(payloads))
+    gathered = np.ascontiguousarray(np.asarray(jax.device_get(gathered)))
+
+    merged = None
+    for d in range(n_shards):
+        unpacked = gathered[d].view(np.float64).reshape(n_features, width, 2)
+        st = dict(states[d])
+        st["values"] = unpacked[..., 0]
+        st["weights"] = unpacked[..., 1]
+        sk_d = StreamingQuantileSketch.from_state(st)
+        merged = sk_d if merged is None else merged.merge(sk_d)
+    return merged.edges(n_bins)

@@ -84,6 +84,17 @@ class ForestConfig:
     # (data.pipeline.BlockFeeder), so the full [N, F] matrix is never
     # device-resident.
     sample_block: int = 0
+    # Bin-edge fitting strategy (core/binning.py):
+    #   "exact"   — one np.quantile over the full raw source (copies +
+    #               sorts [N, F] in host RAM; the original behavior).
+    #   "blocked" — StreamingQuantileSketch over sample blocks: O(block)
+    #               + O(F * sketch) memory, bitwise identical to "exact"
+    #               below the sketch's compression threshold and
+    #               deterministic always.
+    #   "auto"    — "blocked" whenever sample_block > 0 (the streamed
+    #               trainer must not take a full pass over a memmap),
+    #               "exact" otherwise.
+    bin_fit: str = "auto"
     regression: bool = False
     # --- §Perf optimizations (beyond-paper; see EXPERIMENTS.md §Perf) ------
     packed_hist: bool = False         # class index folded into segment ids
@@ -118,6 +129,23 @@ class ForestConfig:
     # voting.predict / predict_regression, PRFModel.predict and
     # serving/. See PERF.md.
     predict_backend: str = "auto"
+
+    def __post_init__(self):
+        # Bin ids are uint8 end to end — reject wrap-prone counts with a
+        # typed error at config time, not as corrupted histograms later.
+        from .binning import validate_n_bins
+
+        validate_n_bins(self.n_bins)
+        if self.bin_fit not in ("auto", "exact", "blocked"):
+            raise ValueError(
+                f"bin_fit must be 'auto', 'exact' or 'blocked', got {self.bin_fit!r}"
+            )
+
+    def resolved_bin_fit(self) -> str:
+        """Resolve bin_fit='auto': blocked iff the trainer streams blocks."""
+        if self.bin_fit != "auto":
+            return self.bin_fit
+        return "blocked" if self.sample_block > 0 else "exact"
 
     @property
     def frontier(self) -> int:

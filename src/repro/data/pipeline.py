@@ -29,13 +29,15 @@ def sample_blocks(
     The block-feed API of the out-of-core trainer
     (``repro.core.api.grow_forest_streamed``): an array source is
     sliced into ``block_rows``-row views (no copy — memmap blocks are
-    only paged in when a block is fed to the device), and an explicit
-    sequence of blocks passes through unchanged, so callers can stream
-    from any host source that yields row blocks. ``block_rows <= 0``
-    means one block (the degenerate resident feed).
+    only paged in when a block is fed to the device). An explicit
+    list/tuple of blocks passes through with ndarray blocks (memmap
+    views included) kept **by identity** — only non-array entries
+    (e.g. nested lists) are materialized, once, here — so callers can
+    stream from any host source that yields row blocks.
+    ``block_rows <= 0`` means one block (the degenerate resident feed).
     """
     if isinstance(x, (list, tuple)):
-        return [np.asarray(b) for b in x]
+        return [b if isinstance(b, np.ndarray) else np.asarray(b) for b in x]
     src = np.asarray(x)
     nb = block_rows if block_rows > 0 else src.shape[0]
     return [src[i:i + nb] for i in range(0, src.shape[0], nb)]
