@@ -13,6 +13,10 @@ serving layer end to end — the series BENCH_kernels.json tracks across
 PRs (see PERF.md).
 """
 import dataclasses
+import json
+import subprocess
+import sys
+import textwrap
 import time
 
 import jax
@@ -71,6 +75,114 @@ def run_level_hist():
                 "packed": packed,
             })
     return rows
+
+
+def run_level_hist_reuse():
+    """Sibling-subtraction T_GR at a deep-forest shape (S=512 frontier
+    slots over 2048 samples — the thin-deep-level regime where the
+    scatter's output zeroing dominates). ``level_hist_reuse_off`` is
+    the full S-slot scatter; ``level_hist_reuse_on`` the packed
+    R=S/2-rank scatter the reuse plane runs instead (its headline
+    ``speedup_vs_off`` is the level-histogram-phase saving the
+    acceptance bar tracks). ``with_expand_us`` adds the
+    ``sibling_expand`` reconstruction (gather parent rows, subtract,
+    concat) that reuse folds into the scoring-prep step — the honest
+    end-of-phase cost of producing the same [k, S, F, B, C] tensor.
+    """
+    from repro.core.histograms import sibling_expand, sibling_segments
+
+    TCd, Nd, Fd, Sd = 4, 2048, 32, 512
+    Rd = Sd // 2
+    shape = f"tc={TCd},N={Nd},F={Fd},S={Sd},B={B},C={C}"
+    rng = np.random.default_rng(4)
+    xb = jnp.asarray(rng.integers(0, B, (Nd, Fd)).astype(np.uint8))
+    base = jnp.asarray(np.eye(C, dtype=np.float32)[rng.integers(0, C, Nd)])
+    w = jnp.asarray(rng.integers(0, 4, (TCd, Nd)).astype(np.float32))
+    slot = jnp.asarray(rng.integers(-1, Sd, (TCd, Nd)).astype(np.int32))
+    small_right = jnp.asarray(rng.integers(0, 2, (TCd, Rd)).astype(np.int32))
+    parent = jnp.asarray(rng.integers(0, Sd, (TCd, Rd)).astype(np.int32))
+    cache_hist = jnp.asarray(
+        rng.integers(0, 8, (TCd, Sd, Fd, B, C)).astype(np.float32))
+    cache_perm = jnp.tile(jnp.arange(Sd, dtype=jnp.int32)[None], (TCd, 1))
+
+    f_off = jax.jit(lambda a, b, c, d: level_histograms(
+        a, b, c, d, n_slots=Sd, n_bins=B, backend="segment_sum"))
+
+    def packed_only(a, b, c, d, sr):
+        seg = sibling_segments(d, sr)
+        return level_histograms(
+            a, b, c, seg, n_slots=Rd, n_bins=B, backend="segment_sum")
+
+    def packed_expand(a, b, c, d, sr, ch, cp, par):
+        h = packed_only(a, b, c, d, sr)
+        return sibling_expand(h, ch, cp, par, Sd)
+
+    f_on = jax.jit(packed_only)
+    f_exp = jax.jit(packed_expand)
+    us_off = _time(f_off, xb, base, w, slot)
+    us_on = _time(f_on, xb, base, w, slot, small_right)
+    us_exp = _time(
+        f_exp, xb, base, w, slot, small_right, cache_hist, cache_perm, parent)
+    return [
+        {"bench": "level_hist_reuse_off", "us_per_call": us_off,
+         "derived": shape, "backend": "segment_sum"},
+        {"bench": "level_hist_reuse_on", "us_per_call": us_on,
+         "derived": f"{shape},R={Rd}", "backend": "segment_sum",
+         "speedup_vs_off": us_off / max(us_on, 1e-9),
+         "with_expand_us": us_exp,
+         "with_expand_speedup": us_off / max(us_exp, 1e-9)},
+    ]
+
+
+def run_comm_reuse():
+    """Mesh psum volume with sibling-subtraction reuse on vs off: lower
+    the distributed trainer under each, parse per-device collective
+    bytes from the post-SPMD HLO (deterministic — no timing). The
+    per-level histogram combine is the dominant collective at this
+    shape, so ``on`` must move about half of ``off``'s bytes — CI
+    asserts the ratio."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import dataclasses, json
+        import jax, jax.numpy as jnp
+        from repro.core import ForestConfig
+        from repro.core.distributed import make_prf_train_fn
+        from repro.launch.mesh import make_mesh
+        from repro.roofline.analysis import analyze_hlo_text
+
+        N, F, C = 1 << 12, 128, 4
+        cfg0 = ForestConfig(n_trees=8, max_depth=5, n_bins=16, n_classes=C,
+                            max_frontier=32, tree_chunk=4)
+        mesh = make_mesh((2, 4), ("data", "model"))
+        out = {}
+        for mode in ("off", "on"):
+            cfg = dataclasses.replace(cfg0, hist_reuse=mode)
+            fn, _ = make_prf_train_fn(cfg, mesh)
+            comp = fn.lower(
+                jax.ShapeDtypeStruct((N, F), jnp.uint8),
+                jax.ShapeDtypeStruct((N,), jnp.int32),
+                jax.ShapeDtypeStruct((2,), jnp.uint32),
+            ).compile()
+            a = analyze_hlo_text(comp.as_text())
+            out[mode] = a["collective_bytes"] / 2**20
+        print("RESULT" + json.dumps(out))
+    """)
+    p = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=1800)
+    if p.returncode != 0:
+        return [{"bench": "comm_psum_reuse", "error": p.stderr[-500:],
+                 "us_per_call": 0.0}]
+    line = [l for l in p.stdout.splitlines() if l.startswith("RESULT")][-1]
+    mb = json.loads(line[len("RESULT"):])
+    return [{
+        "bench": "comm_psum_reuse",
+        "us_per_call": 0.0,
+        "derived": "N=4096,F=128,k=8,depth=5,S=32,mesh=2x4,psum",
+        "collective_mb_off": mb["off"],
+        "collective_mb_on": mb["on"],
+        "on_over_off": mb["on"] / max(mb["off"], 1e-9),
+    }]
 
 
 def run_level_scores():
@@ -302,7 +414,10 @@ def run_binning():
 
 def run():
     rng = np.random.default_rng(0)
-    rows = run_level_hist() + run_level_scores() + run_predict() + run_binning()
+    rows = (
+        run_level_hist() + run_level_hist_reuse() + run_comm_reuse()
+        + run_level_scores() + run_predict() + run_binning()
+    )
 
     N, F, S, B, C = 2048, 128, 4, 16, 4
     xb = jnp.asarray(rng.integers(0, B, (N, F)).astype(np.int32))

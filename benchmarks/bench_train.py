@@ -193,6 +193,28 @@ def run():
         "resident_us": us_oob_res,
     })
 
+    # Sibling-subtraction reuse end to end: the same deep-frontier
+    # forest grown with hist_reuse on vs off (bit-identical trees —
+    # tests/test_hist_reuse.py). The per-level saving is the halved
+    # T_GR scatter (level_hist_reuse_* rows); this row records how much
+    # of it survives whole-training amortization on this backend.
+    deep_cfg = dataclasses.replace(
+        cfg, max_depth=10, max_frontier=512, min_samples_split=4,
+    )
+    us_reuse_on = _time(lambda: grow_forest(
+        xb_dev, y_dev, w_dev,
+        dataclasses.replace(deep_cfg, hist_reuse="on")))
+    us_reuse_off = _time(lambda: grow_forest(
+        xb_dev, y_dev, w_dev,
+        dataclasses.replace(deep_cfg, hist_reuse="off")))
+    rows.append({
+        "bench": "train_e2e_reuse",
+        "us_per_call": us_reuse_on,
+        "derived": f"{SHAPE.replace(f'depth={DEPTH}', 'depth=10')},S=512",
+        "off_us": us_reuse_off,
+        "speedup_vs_off": us_reuse_off / max(us_reuse_on, 1e-9),
+    })
+
     # Over-budgeted depth on separable data: trees purify and every
     # frontier dies at ~level 4 of a 16-level budget, so the early-exit
     # while_loop skips ~3/4 of the level work; the fixed-depth run of

@@ -29,6 +29,12 @@ def main(argv=None) -> None:
         help="comma-separated suite subset: "
              "accuracy|oob|volume|comm|time|kernels|train",
     )
+    parser.add_argument(
+        "--history", action="store_true",
+        help="append a dated name->us_per_call row for the tracked "
+             "(kernels+train) suites to BENCH_history.jsonl — the "
+             "across-run perf series CI uploads as an artifact",
+    )
     args = parser.parse_args(argv)
 
     all_rows = []
@@ -92,6 +98,22 @@ def main(argv=None) -> None:
         }
         with open(os.path.join(_REPO_ROOT, "BENCH_kernels.json"), "w") as f:
             json.dump(payload, f, indent=2, default=str)
+
+        if args.history:
+            # One JSON line per run: the perf series a plot can read
+            # straight off the CI artifact without parsing full dumps.
+            from datetime import date
+
+            line = {
+                "date": date.today().isoformat(),
+                "jax_backend": payload["jax_backend"],
+                "us_per_call": {
+                    r["bench"]: round(float(r.get("us_per_call", 0.0)), 1)
+                    for r in payload["rows"]
+                },
+            }
+            with open(os.path.join(_REPO_ROOT, "BENCH_history.jsonl"), "a") as f:
+                f.write(json.dumps(line) + "\n")
 
 
 if __name__ == "__main__":

@@ -25,11 +25,12 @@ from .dimred import (
 )
 from .dsi import bootstrap_counts
 from .engine import (
-    LocalPlane, _safe_mean, finalize_forest, init_forest, next_frontier,
-    plan_level, stream_block_step, write_level,
+    LocalPlane, _safe_mean, finalize_forest, init_forest, init_hist_cache,
+    next_frontier, plan_level, resolve_hist_reuse, reuse_expand_scores,
+    stream_block_step, write_level,
 )
 from .forest import grow_forest, grow_forest_checkpointed
-from .gain import SplitScores, level_scores, resolve_split_backend
+from .gain import SplitScores, level_scores, resolve_split_backend, sibling_plan
 from .histograms import class_channels, regression_channels
 from .types import Forest, ForestConfig
 from .voting import (
@@ -492,14 +493,15 @@ def _stream_init(level0_hist, config):
 @partial(jax.jit, static_argnames=("config", "route"))
 def _stream_block_step(
     hist_acc, xb_b, base_b, w_b, slot_b, slot_node, split_rank, scores,
-    config, route,
+    config, route, small_right=None,
 ):
     """The fused route+histogram pass for one block on the local plane —
     see ``engine.stream_block_step``. ONE jitted call, ONE read of the
-    block per level."""
+    block per level. ``small_right`` switches the block into the packed
+    sibling-subtraction histogram (``config.hist_reuse``)."""
     return stream_block_step(
         hist_acc, xb_b, base_b, w_b, slot_b, slot_node, split_rank, scores,
-        config, LocalPlane(), route=route,
+        config, LocalPlane(), route=route, small_right=small_right,
     )
 
 
@@ -519,6 +521,36 @@ def _stream_plan_write(forest, slot_node, hist, feature_mask, level, config):
     )
     new_slot_node = next_frontier(is_split, child_base, config.frontier)
     return forest, scores, split_rank, new_slot_node
+
+
+@partial(jax.jit, static_argnames=("config",))
+def _stream_plan_write_reuse(
+    forest, slot_node, packed_h, cache, feature_mask, level, config,
+):
+    """Reuse-mode ``_stream_plan_write``: the level's accumulated packed
+    (small-child) histogram is expanded against the cache
+    (``parent - small``), scored in paired-row order, permuted back to
+    slots, and the refreshed cache — this level's paired tensor plus the
+    next level's small-side plan — rides out with the level plan."""
+    scores, n_node, hist2, perm = reuse_expand_scores(
+        packed_h, cache, feature_mask, config
+    )
+    split_rank, is_split, child_base = plan_level(
+        scores, n_node, slot_node, config, level
+    )
+    forest = write_level(
+        forest, slot_node, split_rank, is_split, child_base, scores, config
+    )
+    new_slot_node = next_frontier(is_split, child_base, config.frontier)
+    parent, small_right = sibling_plan(
+        scores, split_rank, is_split,
+        n_ranks=config.max_splits_per_level, regression=config.regression,
+    )
+    new_cache = {
+        "hist": hist2, "perm": perm,
+        "parent": parent, "small_right": small_right,
+    }
+    return forest, scores, split_rank, new_slot_node, new_cache
 
 
 def _stream_setup(
@@ -550,12 +582,18 @@ def _stream_setup(
     return feeder, y_np, w_np, sizes, offsets
 
 
-def _stream_state_like(sizes, config: ForestConfig):
+def _stream_state_like(sizes, config: ForestConfig, hist_width: int = 0):
     """Structure template for the streamed growth checkpoint: the
     host-driven driver's full inter-level carry. ``scores``/``split_rank``
     must be part of it — the streaming plane fuses each level's routing
     into the NEXT level's block sweep, so resuming at level L+1 needs
-    level L's plan, not just the forest and frontier."""
+    level L's plan, not just the forest and frontier.
+
+    ``hist_width > 0`` adds the sibling-subtraction cache (the plane's
+    post-combine feature width) — the reuse carry must be durable or a
+    resumed run would lose the subtraction baseline. With reuse off the
+    entry is ``None``, an *empty* pytree child, so off-mode templates
+    (and therefore existing checkpoints) are byte-compatible."""
     k, S = config.n_trees, config.frontier
     C = 3 if config.regression else config.n_classes
     return {
@@ -571,6 +609,9 @@ def _stream_state_like(sizes, config: ForestConfig):
         "split_rank": jnp.zeros((k, S), jnp.int32),
         "slots": [jnp.zeros((k, n), jnp.int32) for n in sizes],
         "level": jnp.asarray(0, jnp.int32),
+        "hist_cache": (
+            init_hist_cache(config, hist_width) if hist_width > 0 else None
+        ),
     }
 
 
@@ -661,6 +702,11 @@ def grow_forest_streamed(
     B = config.n_bins
     C = 3 if config.regression else config.n_classes
     mask_dev = None if feature_mask is None else jnp.asarray(feature_mask)
+    # Sibling-subtraction reuse: blocks scatter into R rank segments
+    # instead of S slots (the per-level carry is half the tensor) and
+    # the plan step subtracts large children from the durable cache.
+    reuse = resolve_hist_reuse(config, F)
+    n_rows = config.max_splits_per_level if reuse else S
 
     # Per-block constants: pinned on device ONCE for the whole growth.
     # Quarantined blocks get no pins — nothing of theirs ever lands on
@@ -681,7 +727,7 @@ def grow_forest_streamed(
         from ..checkpoint.checkpoint import restore_latest_valid
 
         restored = restore_latest_valid(
-            _stream_state_like(sizes, config), resume_from
+            _stream_state_like(sizes, config, F if reuse else 0), resume_from
         )
         if restored is not None:
             state, _ = restored
@@ -689,20 +735,23 @@ def grow_forest_streamed(
         forest, slot_node = state["forest"], state["slot_node"]
         scores, split_rank = state["scores"], state["split_rank"]
         slot_dev, start = list(state["slots"]), int(state["level"])
+        cache = state["hist_cache"]
     else:
         # The per-sample frontier table: device-resident across levels.
         slot_dev = [jnp.zeros((k, n), jnp.int32) for n in sizes]
         slot_node = jnp.full((k, S), -1, jnp.int32).at[:, 0].set(0)
         forest, scores, split_rank = None, None, None
+        cache = init_hist_cache(config, F) if reuse else None
         start = 0
 
     def level_sweep(route: bool):
-        hist = jnp.zeros((k, S, F, B, C), jnp.float32)
+        hist = jnp.zeros((k, n_rows, F, B, C), jnp.float32)
         for i, xb_b in zip(feeder.live_blocks, feeder.sweep()):
             hist, slot_dev[i] = _stream_block_step(
                 hist, xb_b, base_dev[i], w_dev[i], slot_dev[i], slot_node,
                 split_rank if route else None, scores if route else None,
                 config, route,
+                cache["small_right"] if reuse else None,
             )
         return hist
 
@@ -713,16 +762,25 @@ def grow_forest_streamed(
             hist = level_sweep(route=level > 0)
             if forest is None:
                 forest = _stream_init(hist, config)  # root node, free at level 0
-            forest, scores, split_rank, slot_node = _stream_plan_write(
-                forest, slot_node, hist, mask_dev,
-                jnp.asarray(level, jnp.int32), config,
-            )
+            if reuse:
+                forest, scores, split_rank, slot_node, cache = (
+                    _stream_plan_write_reuse(
+                        forest, slot_node, hist, cache, mask_dev,
+                        jnp.asarray(level, jnp.int32), config,
+                    )
+                )
+            else:
+                forest, scores, split_rank, slot_node = _stream_plan_write(
+                    forest, slot_node, hist, mask_dev,
+                    jnp.asarray(level, jnp.int32), config,
+                )
             if manager is not None:
                 manager.maybe_save({
                     "forest": forest, "slot_node": slot_node,
                     "scores": scores, "split_rank": split_rank,
                     "slots": slot_dev,
                     "level": jnp.asarray(level + 1, jnp.int32),
+                    "hist_cache": cache,
                 }, level + 1)
             if on_level is not None:
                 on_level(level + 1, forest)

@@ -57,12 +57,14 @@ def _shard_map(f, *, mesh, in_specs, out_specs):
 from .dsi import bootstrap_counts
 from .engine import (
     CollectivePlane, _gather_feature_bins, _safe_mean, finalize_forest, grow,
-    init_forest, init_growth_state, level_step, next_frontier, plan_level,
+    init_forest, init_growth_state, init_hist_cache, level_step,
+    next_frontier, plan_level, resolve_hist_reuse, reuse_expand_scores,
     stream_block_step, write_level,
 )
 from .types import GrowthState
 from .gain import (
     SplitScores, level_scores, multiway_gain_ratio, resolve_split_backend,
+    sibling_plan,
 )
 from .histograms import class_channels, level_histograms, regression_channels
 from .types import Forest, ForestConfig
@@ -186,6 +188,12 @@ class MeshPlane(CollectivePlane):
         )
         return scores, n_node
 
+    def hist_width(self, n_features: int) -> int:
+        # The hist_reuse cache stores POST-combine histograms: the full
+        # local feature shard under psum, only the post-scatter slice
+        # under reduce-scatter (the cache never widens the rs layout).
+        return self.fl_sub if self.use_rs else n_features
+
     def broadcast_route(self, xb_loc, f_i, thr_i):
         f_shard = f_i // self.Fl                                 # global ids
         f_here = jnp.where(f_shard == self.midx, f_i - self.midx * self.Fl, 0)
@@ -277,11 +285,35 @@ def grow_sharded_checkpointed(
             sample_axes=sample_axes, feature_axis=feature_axis,
         )
 
-    def init_kernel(base_loc, w_loc, mask_loc):
-        st = init_growth_state(base_loc, w_loc, config, make_plane(mask_loc))
-        return st.forest, st.slot_node, st.sample_slot, st.rng, st.level
+    # The hist_reuse cache joins the carry (and therefore every
+    # checkpoint): resolved host-side from the LOCAL feature width so it
+    # matches what init_growth_state builds inside the shard_map. Its
+    # histogram is feature-sharded (post-psum each feature shard keeps
+    # its own slice; under reduce-scatter the slice is further split
+    # over the data axis); the small index tables are replicated.
+    Fl = F // int(mesh.shape[feature_axis])
+    use_rs = (
+        config.hist_reduce == "psum_scatter"
+        and len(sample_axes) == 1 and Fl % D == 0
+    )
+    reuse = resolve_hist_reuse(config, Fl)
+    cache_specs = None
+    if reuse:
+        hist_axes = (feature_axis, sample_axes[0]) if use_rs else feature_axis
+        cache_specs = {
+            "hist": P(None, None, hist_axes),
+            "perm": P(), "parent": P(), "small_right": P(),
+        }
 
-    state_specs = (P(), P(), P(None, sample_axes), P(), P())
+    def init_kernel(base_loc, w_loc, mask_loc):
+        st = init_growth_state(
+            base_loc, w_loc, config, make_plane(mask_loc),
+            n_features=Fl if reuse else None,
+        )
+        return st.forest, st.slot_node, st.sample_slot, st.rng, st.level, \
+            st.hist_cache
+
+    state_specs = (P(), P(), P(None, sample_axes), P(), P(), cache_specs)
     init_fn = jax.jit(_shard_map(
         init_kernel, mesh=mesh,
         in_specs=(P(sample_axes), P(None, sample_axes), P(None, feature_axis)),
@@ -289,16 +321,17 @@ def grow_sharded_checkpointed(
     ))
 
     def step_kernel(xb_loc, base_loc, w_loc, mask_loc, forest, slot_node,
-                    slot_loc, rng, level):
+                    slot_loc, rng, level, cache):
         st = level_step(
             xb_loc, base_loc, w_loc,
             GrowthState(
                 forest=forest, slot_node=slot_node, sample_slot=slot_loc,
-                rng=rng, level=level,
+                rng=rng, level=level, hist_cache=cache,
             ),
             config, make_plane(mask_loc),
         )
-        return st.forest, st.slot_node, st.sample_slot, st.rng, st.level
+        return st.forest, st.slot_node, st.sample_slot, st.rng, st.level, \
+            st.hist_cache
 
     step_fn = jax.jit(_shard_map(
         step_kernel, mesh=mesh,
@@ -319,18 +352,18 @@ def grow_sharded_checkpointed(
         )
         if restored is not None:
             state, _ = restored
-    forest, slot_node, slot_loc, rng, level = state
+    forest, slot_node, slot_loc, rng, level, cache = state
     while (
         int(level) < config.max_depth
         and bool(np.any(np.asarray(slot_node) >= 0))
     ):
-        forest, slot_node, slot_loc, rng, level = step_fn(
+        forest, slot_node, slot_loc, rng, level, cache = step_fn(
             xb, base_dev, w_dev, mask_dev,
-            forest, slot_node, slot_loc, rng, level,
+            forest, slot_node, slot_loc, rng, level, cache,
         )
         if manager is not None:
             manager.maybe_save(
-                (forest, slot_node, slot_loc, rng, level), int(level)
+                (forest, slot_node, slot_loc, rng, level, cache), int(level)
             )
         if on_level is not None:
             on_level(int(level), forest)
@@ -404,6 +437,31 @@ def grow_forest_streamed_sharded(
     rep_sh = NamedSharding(mesh, P())
     hist_spec = P(sample_axes, None, None, feature_axis)
 
+    # Sibling-subtraction reuse (config.hist_reuse): per-block partials
+    # scatter into R rank segments instead of S slots — the [D, k, R,
+    # F, B, C] carry AND the per-level combine halve — and the plan
+    # step reconstructs large children from the durable cache. The
+    # cache histogram is feature-sharded exactly like the checkpointed
+    # resident path's.
+    Fl = F // int(mesh.shape[feature_axis])
+    use_rs = (
+        config.hist_reduce == "psum_scatter"
+        and len(sample_axes) == 1 and Fl % D == 0
+    )
+    reuse = resolve_hist_reuse(config, Fl)
+    n_rows = config.max_splits_per_level if reuse else S
+    cache_sh = None
+    if reuse:
+        hist_axes = (feature_axis, sample_axes[0]) if use_rs else feature_axis
+        cache_sh = {
+            "hist": NamedSharding(mesh, P(None, None, hist_axes)),
+            "perm": rep_sh, "parent": rep_sh, "small_right": rep_sh,
+        }
+        cache_specs = {
+            "hist": P(None, None, hist_axes),
+            "perm": P(), "parent": P(), "small_right": P(),
+        }
+
     from ..data.pipeline import BlockFeeder
 
     pads = [(-n) % D for n in sizes]
@@ -441,55 +499,59 @@ def grow_forest_streamed_sharded(
         )
 
     def step_kernel_route(hist_part, xb_loc, base_loc, w_loc, slot_loc,
-                          slot_node, split_rank, scores):
+                          slot_node, split_rank, scores, small_right=None):
         h, slot_loc = stream_block_step(
             hist_part[0], xb_loc, base_loc, w_loc, slot_loc, slot_node,
             split_rank, scores, config, make_plane(xb_loc.shape[1]),
-            route=True,
+            route=True, small_right=small_right,
         )
         return h[None], slot_loc
 
     def step_kernel_first(hist_part, xb_loc, base_loc, w_loc, slot_loc,
-                          slot_node):
+                          slot_node, small_right=None):
         h, slot_loc = stream_block_step(
             hist_part[0], xb_loc, base_loc, w_loc, slot_loc, slot_node,
             None, None, config, make_plane(xb_loc.shape[1]), route=False,
+            small_right=small_right,
         )
         return h[None], slot_loc
 
     data_specs = (hist_spec, P(sample_axes, feature_axis), P(sample_axes),
                   P(None, sample_axes), P(None, sample_axes), P())
+    sr_specs = (P(),) if reuse else ()
     step_route = jax.jit(_shard_map(
         step_kernel_route, mesh=mesh,
-        in_specs=data_specs + (P(), P()),
+        in_specs=data_specs + (P(), P()) + sr_specs,
         out_specs=(hist_spec, P(None, sample_axes)),
     ))
     step_first = jax.jit(_shard_map(
         step_kernel_first, mesh=mesh,
-        in_specs=data_specs,
+        in_specs=data_specs + sr_specs,
         out_specs=(hist_spec, P(None, sample_axes)),
     ))
 
     split_be = resolve_split_backend(config.split_backend)
+
+    def _root_init(forest, hist_c):
+        # Root counts: any feature's bin marginal of the level-0
+        # histogram (slot/rank row 0) sums to the [k, C] root class
+        # counts (identical on every shard — exact integer sums).
+        root = hist_c[:, 0, 0].sum(axis=1)
+        forest = dataclasses.replace(
+            forest, class_counts=forest.class_counts.at[:, 0].set(root),
+        )
+        if config.regression:
+            forest = dataclasses.replace(
+                forest, value=forest.value.at[:, 0].set(_safe_mean(root)),
+            )
+        return forest
 
     def make_plan(init: bool):
         def plan_kernel(hist_part, forest, slot_node, level, mask_loc):
             plane = make_plane(hist_part.shape[3], mask_loc)
             hist_c = plane.combine_hist(hist_part[0])
             if init:
-                # Root counts: any feature's bin marginal of the level-0
-                # histogram (slot 0) sums to the [k, C] root class counts
-                # (identical on every shard — exact integer sums).
-                root = hist_c[:, 0, 0].sum(axis=1)
-                forest = dataclasses.replace(
-                    forest,
-                    class_counts=forest.class_counts.at[:, 0].set(root),
-                )
-                if config.regression:
-                    forest = dataclasses.replace(
-                        forest,
-                        value=forest.value.at[:, 0].set(_safe_mean(root)),
-                    )
+                forest = _root_init(forest, hist_c)
             scores_loc, n_loc = level_scores(
                 hist_c, plane.level_mask, regression=config.regression,
                 backend=split_be,
@@ -507,6 +569,42 @@ def grow_forest_streamed_sharded(
                 next_frontier(is_split, child_base, config.frontier),
             )
 
+        def plan_kernel_reuse(hist_part, forest, slot_node, level, mask_loc,
+                              cache):
+            plane = make_plane(hist_part.shape[3], mask_loc)
+            hist_c = plane.combine_hist(hist_part[0])   # packed: half the wire
+            if init:
+                forest = _root_init(forest, hist_c)
+            scores, n_node, hist2, perm = reuse_expand_scores(
+                hist_c, cache, plane.level_mask, config
+            )
+            scores, n_node = plane.merge_winners(scores, n_node)
+            split_rank, is_split, child_base = plan_level(
+                scores, n_node, slot_node, config, level
+            )
+            forest = write_level(
+                forest, slot_node, split_rank, is_split, child_base, scores,
+                config,
+            )
+            parent, small_right = sibling_plan(
+                scores, split_rank, is_split,
+                n_ranks=config.max_splits_per_level,
+                regression=config.regression,
+            )
+            return (
+                forest, scores, split_rank,
+                next_frontier(is_split, child_base, config.frontier),
+                {"hist": hist2, "perm": perm,
+                 "parent": parent, "small_right": small_right},
+            )
+
+        if reuse:
+            return jax.jit(_shard_map(
+                plan_kernel_reuse, mesh=mesh,
+                in_specs=(hist_spec, P(), P(), P(), P(None, feature_axis),
+                          cache_specs),
+                out_specs=(P(), P(), P(), P(), cache_specs),
+            ))
         return jax.jit(_shard_map(
             plan_kernel, mesh=mesh,
             in_specs=(hist_spec, P(), P(), P(), P(None, feature_axis)),
@@ -516,7 +614,7 @@ def grow_forest_streamed_sharded(
     plan_init, plan_next = make_plan(True), make_plan(False)
 
     hist0 = jax.device_put(
-        jnp.zeros((D, k, S, F, B, C), jnp.float32),
+        jnp.zeros((D, k, n_rows, F, B, C), jnp.float32),
         NamedSharding(mesh, hist_spec),
     )
 
@@ -525,11 +623,16 @@ def grow_forest_streamed_sharded(
         from ..checkpoint.checkpoint import restore_latest_valid
         from .api import _stream_state_like
 
+        # The like-template is GLOBAL-shaped: cache width F (the mesh
+        # shards its feature dim per cache_sh on restore).
         like = _stream_state_like(
-            [n + p for n, p in zip(sizes, pads)], config
+            [n + p for n, p in zip(sizes, pads)], config,
+            F if reuse else 0,
         )
         shardings = jax.tree_util.tree_map(lambda _: rep_sh, like)
         shardings["slots"] = [kn_sh for _ in like["slots"]]
+        if reuse:
+            shardings["hist_cache"] = cache_sh
         restored = restore_latest_valid(like, resume_from, shardings)
         if restored is not None:
             state, _ = restored
@@ -537,24 +640,32 @@ def grow_forest_streamed_sharded(
         forest, slot_node = state["forest"], state["slot_node"]
         scores, split_rank = state["scores"], state["split_rank"]
         slot_dev, start = list(state["slots"]), int(state["level"])
+        cache = state.get("hist_cache") if reuse else None
     else:
         slot_node = jax.device_put(
             jnp.full((k, S), -1, jnp.int32).at[:, 0].set(0), rep_sh
         )
         forest, scores, split_rank = None, None, None
         start = 0
+        # Global cache width F — device_put shards dim 2 per cache_sh.
+        cache = (
+            jax.device_put(init_hist_cache(config, F), cache_sh)
+            if reuse else None
+        )
 
     def level_sweep(route: bool):
         hist = hist0
+        sr = ((cache["small_right"],) if reuse else ())
         for i, xb_b in enumerate(feeder.sweep()):
             if route:
                 hist, slot_dev[i] = step_route(
                     hist, xb_b, base_dev[i], w_dev[i], slot_dev[i],
-                    slot_node, split_rank, scores,
+                    slot_node, split_rank, scores, *sr,
                 )
             else:
                 hist, slot_dev[i] = step_first(
                     hist, xb_b, base_dev[i], w_dev[i], slot_dev[i], slot_node,
+                    *sr,
                 )
         return hist
 
@@ -566,15 +677,21 @@ def grow_forest_streamed_sharded(
             plan = plan_next if forest is not None else plan_init
             if forest is None:
                 forest = jax.device_put(init_forest(config), rep_sh)
-            forest, scores, split_rank, slot_node = plan(
-                hist, forest, slot_node, jnp.asarray(level, jnp.int32),
-                mask_dev,
-            )
+            if reuse:
+                forest, scores, split_rank, slot_node, cache = plan(
+                    hist, forest, slot_node, jnp.asarray(level, jnp.int32),
+                    mask_dev, cache,
+                )
+            else:
+                forest, scores, split_rank, slot_node = plan(
+                    hist, forest, slot_node, jnp.asarray(level, jnp.int32),
+                    mask_dev,
+                )
             if manager is not None:
                 manager.maybe_save({
                     "forest": forest, "slot_node": slot_node,
                     "scores": scores, "split_rank": split_rank,
-                    "slots": slot_dev,
+                    "slots": slot_dev, "hist_cache": cache,
                     "level": jnp.asarray(level + 1, jnp.int32),
                 }, level + 1)
             if on_level is not None:

@@ -41,14 +41,28 @@ produce identical ``Forest`` arrays (tests/test_engine.py).
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .gain import SplitScores, level_scores, node_counts, resolve_split_backend
-from .histograms import blocked_level_histograms, hist_feature_slab, level_histograms
+from .gain import (
+    SplitScores,
+    level_scores,
+    node_counts,
+    resolve_split_backend,
+    sibling_plan,
+)
+from .histograms import (
+    blocked_level_histograms,
+    hist_feature_slab,
+    level_histograms,
+    sibling_expand,
+    sibling_perm,
+    sibling_segments,
+)
 from .types import Forest, ForestConfig, GrowthState
 
 
@@ -141,6 +155,13 @@ class CollectivePlane:
         bins_i = _gather_feature_bins(x_binned, f_i)
         return (bins_i > thr_i).astype(jnp.int32)
 
+    def hist_width(self, n_features: int) -> int:
+        """Feature width of a post-``combine_hist`` histogram on this
+        plane — what the ``hist_reuse`` cache must allocate. The local
+        shard's full width here; the reduce-scatter mesh plane keeps
+        only its post-scatter feature slice."""
+        return n_features
+
 
 class LocalPlane(CollectivePlane):
     """Single-host plane: the whole ``[N, F]`` block lives on one device."""
@@ -154,20 +175,26 @@ class LocalPlane(CollectivePlane):
 # ---------------------------------------------------------------------------
 
 
-def _level_hists(x_binned, base_channels, w_c, slot_c, config: ForestConfig):
+def _level_hists(
+    x_binned, base_channels, w_c, slot_c, config: ForestConfig,
+    n_slots: Optional[int] = None,
+):
     """One chunk's level histogram, blocked over samples when
-    ``config.sample_block`` asks for it."""
+    ``config.sample_block`` asks for it. ``n_slots`` overrides the
+    frontier width (the sibling-subtraction reuse path histograms into
+    ``max_splits_per_level`` *rank* segments instead of slots)."""
     packed = config.packed_hist and not config.regression
+    S = config.frontier if n_slots is None else n_slots
     if config.sample_block > 0:
         return blocked_level_histograms(
             x_binned, base_channels, w_c, slot_c,
-            n_slots=config.frontier, n_bins=config.n_bins,
+            n_slots=S, n_bins=config.n_bins,
             sample_block=config.sample_block, packed=packed,
             backend=config.hist_backend,
         )
     return level_histograms(
         x_binned, base_channels, w_c, slot_c,
-        n_slots=config.frontier, n_bins=config.n_bins, packed=packed,
+        n_slots=S, n_bins=config.n_bins, packed=packed,
         backend=config.hist_backend,
     )
 
@@ -305,6 +332,188 @@ def chunked_level_scores(
 
 
 # ---------------------------------------------------------------------------
+# Sibling-subtraction histogram reuse (ForestConfig.hist_reuse)
+# ---------------------------------------------------------------------------
+
+
+def resolve_hist_reuse(config: ForestConfig, n_features: int) -> bool:
+    """Whether growth should carry the between-level histogram cache.
+
+    ``resolved_hist_reuse()`` answers the policy question (auto ->
+    classification only); this adds the capacity gate: the cache is one
+    ``[k, S, F, B, C]`` f32 tensor pinned across the whole growth, so if
+    ``4*k*S*F*B*C`` exceeds ``hist_reuse_budget_mb`` the engine falls
+    back to ``off`` rather than OOM a device. ``n_features`` is the
+    width this plane would cache (the local shard width on a mesh — the
+    budget is per-device, and identical on every shard).
+    """
+    if config.resolved_hist_reuse() == "off":
+        return False
+    C = 3 if config.regression else config.n_classes
+    cache_bytes = 4 * config.n_trees * config.frontier * n_features * config.n_bins * C
+    return cache_bytes <= config.hist_reuse_budget_mb * (1 << 20)
+
+
+def init_hist_cache(config: ForestConfig, hist_width: int) -> dict:
+    """Level-0 reuse cache. ``small_right = 0`` makes slot 0 the "small"
+    child of rank 0, so the root histogram falls out of the same packed
+    path with no special case: every sample (slot 0) lands in rank
+    segment 0, and the all-(-1) ``parent`` table zeroes every
+    subtraction row against the zero ``hist``."""
+    k, S, R = config.n_trees, config.frontier, config.max_splits_per_level
+    C = 3 if config.regression else config.n_classes
+    return {
+        "hist": jnp.zeros((k, S, hist_width, config.n_bins, C), jnp.float32),
+        "perm": jnp.tile(jnp.arange(S, dtype=jnp.int32)[None, :], (k, 1)),
+        "parent": jnp.full((k, R), -1, jnp.int32),
+        "small_right": jnp.zeros((k, R), jnp.int32),
+    }
+
+
+def fused_reuse_level_scores(
+    x_binned, base_channels, weights, seg, feature_mask, cache,
+    config: ForestConfig,
+):
+    """Reuse-mode analogue of ``fused_level_scores``: per feature slab,
+    build the *packed* small-child histogram (R rank rows — half the
+    one-hot matmul width of the off path), expand it against the cached
+    slab (``parent - small``), feed the expanded slab to the split-scan
+    carry, and write it into the next cache tensor. The full-width
+    cache lives in HBM (that is exactly what ``hist_reuse_budget_mb``
+    budgets); the *working set* stays one ``[k, S, W, B, C]`` slab, so
+    the PR-2 no-full-HBM-histogram invariant degrades gracefully to
+    "no second full tensor".
+
+    Returns (row-order SplitScores, row-order n_node, hist2
+    [k, S, F, B, C] in paired-row order).
+    """
+    from ..kernels.gain_ratio.kernel import _round_up
+    from ..kernels.split_scan.kernel import init_carry, split_scan_block
+
+    k = weights.shape[0]
+    N, F = x_binned.shape
+    S, B, R = config.frontier, config.n_bins, config.max_splits_per_level
+    C = base_channels.shape[-1]
+    packed = config.packed_hist and not config.regression
+    # Off-path slab width (sized for S rows) keeps split_scan_block's
+    # geometry — and therefore its running-best carry arithmetic —
+    # identical to the reuse=off trace.
+    W = hist_feature_slab(N, F, S, B, C, packed=packed)
+    Fp = _round_up(F, W)
+    xb = jnp.pad(x_binned, ((0, 0), (0, Fp - F)))
+    mask = (
+        feature_mask if feature_mask is not None else jnp.ones((k, F), jnp.bool_)
+    )
+    mask = jnp.pad(mask, ((0, 0), (0, Fp - F)))
+    cache_h = jnp.pad(cache["hist"], ((0, 0), (0, 0), (0, Fp - F)) + ((0, 0),) * 2)
+    interpret = jax.default_backend() != "tpu"
+
+    def slab(j, acc):
+        carry, h2 = acc
+        f0 = j * W
+        xb_s = jax.lax.dynamic_slice_in_dim(xb, f0, W, axis=1)
+        mask_s = jax.lax.dynamic_slice_in_dim(mask, f0, W, axis=1)
+        ch_s = jax.lax.dynamic_slice_in_dim(cache_h, f0, W, axis=2)
+        packed_s = _level_hists(xb_s, base_channels, weights, seg, config, n_slots=R)
+        hist_s = sibling_expand(packed_s, ch_s, cache["perm"], cache["parent"], S)
+        carry = split_scan_block(
+            hist_s, mask_s, carry, f0,
+            regression=config.regression, interpret=interpret,
+        )
+        h2 = jax.lax.dynamic_update_slice_in_dim(h2, hist_s, f0, axis=2)
+        return carry, h2
+
+    carry, h2 = jax.lax.fori_loop(
+        0, Fp // W, slab,
+        (init_carry(k, S, C), jnp.zeros((k, S, Fp, B, C), jnp.float32)),
+    )
+    scores = SplitScores(*carry)
+    return scores, node_counts(scores, regression=config.regression), h2[:, :, :F]
+
+
+def _permute_rows(perm: jnp.ndarray, a: jnp.ndarray) -> jnp.ndarray:
+    """Gather the [k, S, ...] per-row descriptors ``a`` into slot order
+    (``perm`` is ``sibling_perm``'s slot -> paired-row map)."""
+    idx = perm.reshape(perm.shape + (1,) * (a.ndim - 2))
+    return jnp.take_along_axis(a, idx, axis=1)
+
+
+def reuse_expand_scores(
+    packed_h, cache, feature_mask, config: ForestConfig,
+):
+    """Post-combine half of the reuse task group, shared with the
+    streaming drivers (whose packed histogram accumulates over blocks
+    before this runs once per level): expand the packed tensor against
+    the cache (``parent - small``), score the paired rows, and permute
+    the O(k*S) descriptors to slot order.
+
+    Returns (slot-order SplitScores, n_node, hist2 paired-row tensor,
+    perm) — the latter two are the next cache's ``hist`` / ``perm``.
+    """
+    S = config.frontier
+    hist2 = sibling_expand(
+        packed_h, cache["hist"], cache["perm"], cache["parent"], S
+    )
+    perm = sibling_perm(cache["small_right"], S)
+    scores_r, n_r = level_scores(
+        hist2, feature_mask, regression=config.regression,
+        backend=resolve_split_backend(config.split_backend),
+    )
+    scores = jax.tree_util.tree_map(partial(_permute_rows, perm), scores_r)
+    return scores, _permute_rows(perm, n_r), hist2, perm
+
+
+def reuse_level_task_group(
+    x_binned, base_channels, weights, sample_slot, slot_node, cache,
+    config: ForestConfig, plane: CollectivePlane,
+):
+    """Reuse-mode T_GR + T_NS task group.
+
+    Histogram ONLY the samples routed to small children (R rank
+    segments instead of S slot segments — ``sibling_segments`` parks
+    everything else into the dump row, the same masking machinery
+    early-exit uses for dead trees), combine the *packed* tensor on the
+    plane (half the psum / psum_scatter bytes of the off path),
+    reconstruct large children as ``parent - small`` post-combine so
+    every shard agrees, and score the paired-row tensor. Only the
+    O(k*S) split descriptors are permuted back to slot order —
+    reordering the [k, S, F, B, C] tensor itself would be a full extra
+    memory pass, which is why the cache stores paired rows plus their
+    ``perm``.
+
+    Returns (slot-order merged SplitScores, n_node, next cache dict
+    missing its ``parent`` / ``small_right`` entries — ``level_step``
+    fills those from ``sibling_plan`` once the level is planned).
+    """
+    S, R = config.frontier, config.max_splits_per_level
+    tree_live = jnp.any(slot_node >= 0, axis=1)
+    w_level = weights * tree_live[:, None].astype(weights.dtype)
+    seg = sibling_segments(sample_slot, cache["small_right"])
+    split_be = resolve_split_backend(config.split_backend)
+
+    if plane.combine_hist is None and split_be == "pallas":
+        perm = sibling_perm(cache["small_right"], S)
+        scores_r, n_r, hist2 = fused_reuse_level_scores(
+            x_binned, base_channels, w_level, seg, plane.level_mask,
+            cache, config,
+        )
+        scores = jax.tree_util.tree_map(partial(_permute_rows, perm), scores_r)
+        n_node = _permute_rows(perm, n_r)
+    else:
+        packed_h = _level_hists(
+            x_binned, base_channels, w_level, seg, config, n_slots=R
+        )
+        if plane.combine_hist is not None:
+            packed_h = plane.combine_hist(packed_h)   # half the wire bytes
+        scores, n_node, hist2, perm = reuse_expand_scores(
+            packed_h, cache, plane.level_mask, config
+        )
+
+    scores, n_node = plane.merge_winners(scores, n_node)
+    return scores, n_node, {"hist": hist2, "perm": perm}
+
+
+# ---------------------------------------------------------------------------
 # The level-step pieces — shared by every plane and the streaming driver
 # ---------------------------------------------------------------------------
 
@@ -317,8 +526,14 @@ def init_growth_state(
     *,
     rng: Optional[jnp.ndarray] = None,
     root_counts: Optional[jnp.ndarray] = None,   # [k, C] precomputed (streaming)
+    n_features: Optional[int] = None,            # local-shard F; enables hist_reuse
 ) -> GrowthState:
-    """Forest with the root node populated + an empty level-0 frontier."""
+    """Forest with the root node populated + an empty level-0 frontier.
+
+    ``n_features`` opts the state into the ``hist_reuse`` cache (when
+    the config and budget allow it): callers that do not thread it get
+    the reuse-off pytree structure, so existing states and checkpoints
+    are untouched."""
     k, S = config.n_trees, config.frontier
     forest = init_forest(config)
     if root_counts is None:
@@ -332,12 +547,16 @@ def init_growth_state(
         forest = dataclasses.replace(
             forest, value=forest.value.at[:, 0].set(_safe_mean(root_counts))
         )
+    hist_cache = None
+    if n_features is not None and resolve_hist_reuse(config, n_features):
+        hist_cache = init_hist_cache(config, plane.hist_width(n_features))
     return GrowthState(
         forest=forest,
         slot_node=jnp.full((k, S), -1, jnp.int32).at[:, 0].set(0),
         sample_slot=jnp.zeros((k, weights.shape[1]), jnp.int32),
         rng=rng if rng is not None else jax.random.PRNGKey(0),
         level=jnp.asarray(0, jnp.int32),
+        hist_cache=hist_cache,
     )
 
 
@@ -439,6 +658,7 @@ def stream_block_step(
     hist_acc, xb_b, base_b, w_b, slot_b, slot_node,
     split_rank, scores: Optional[SplitScores],
     config: ForestConfig, plane: CollectivePlane, *, route: bool,
+    small_right: Optional[jnp.ndarray] = None,
 ):
     """ONE device call per (block, level) of the streaming data plane.
 
@@ -459,15 +679,28 @@ def stream_block_step(
     plane's ``combine_hist`` runs once per level in the plan step, not
     per block.
 
+    With ``small_right`` (the sibling-subtraction reuse plane,
+    ``config.hist_reuse``) the block is histogrammed into the *packed*
+    ``max_splits_per_level`` rank segments — only samples routed to
+    small children contribute; everything else parks in the dump row —
+    so the accumulated carry (and, on the mesh, the per-level combine)
+    is half the off-path tensor. ``hist_acc`` must then be the packed
+    ``[k, R, F, B, C]`` carry.
+
     Returns ``(hist_acc + block_hist, routed slot_b)``.
     """
     if route:
         slot_b = route_level(xb_b, slot_b, split_rank, scores, plane)
     tree_live = jnp.any(slot_node >= 0, axis=1)
     w_lvl = w_b * tree_live[:, None].astype(w_b.dtype)
+    if small_right is None:
+        slots, n_slots = slot_b, config.frontier
+    else:
+        slots = sibling_segments(slot_b, small_right)
+        n_slots = config.max_splits_per_level
     h = level_histograms(
-        xb_b, base_b, w_lvl, slot_b,
-        n_slots=config.frontier, n_bins=config.n_bins,
+        xb_b, base_b, w_lvl, slots,
+        n_slots=n_slots, n_bins=config.n_bins,
         packed=config.packed_hist and not config.regression,
         backend=config.hist_backend,
     )
@@ -523,11 +756,24 @@ def level_step(
     the host-driven ``grow_checkpointed`` loop — the same traced
     computation either way, so a run that checkpoints between levels
     produces the bit-identical forest of an uninterrupted ``grow``.
+
+    With ``state.hist_cache`` present (``ForestConfig.hist_reuse``) the
+    task group runs the sibling-subtraction path and the carry's cache
+    is refreshed with this level's paired histograms plus the next
+    level's small-side plan; the branch is on pytree *structure*, so
+    both modes are one traced computation each.
     """
-    scores, n_node = level_task_group(
-        x_binned, base_channels, weights, state.sample_slot,
-        state.slot_node, config, plane,
-    )
+    if state.hist_cache is None:
+        scores, n_node = level_task_group(
+            x_binned, base_channels, weights, state.sample_slot,
+            state.slot_node, config, plane,
+        )
+        new_cache = None
+    else:
+        scores, n_node, new_cache = reuse_level_task_group(
+            x_binned, base_channels, weights, state.sample_slot,
+            state.slot_node, state.hist_cache, config, plane,
+        )
     split_rank, is_split, child_base = plan_level(
         scores, n_node, state.slot_node, config, state.level
     )
@@ -539,12 +785,20 @@ def level_step(
         x_binned, state.sample_slot, split_rank, scores, plane
     )
     slot_node = next_frontier(is_split, child_base, config.frontier)
+    if new_cache is not None:
+        parent, small_right = sibling_plan(
+            scores, split_rank, is_split,
+            n_ranks=config.max_splits_per_level,
+            regression=config.regression,
+        )
+        new_cache = dict(new_cache, parent=parent, small_right=small_right)
     return GrowthState(
         forest=forest,
         slot_node=slot_node,
         sample_slot=sample_slot,
         rng=state.rng,
         level=state.level + 1,
+        hist_cache=new_cache,
     )
 
 
@@ -587,13 +841,17 @@ def grow_checkpointed(
         from ..checkpoint.checkpoint import restore_latest_valid
 
         like = init_growth_state(
-            base_channels, weights, config, plane, rng=rng
+            base_channels, weights, config, plane, rng=rng,
+            n_features=x_binned.shape[1],
         )
         restored = restore_latest_valid(like, resume_from)
         if restored is not None:
             state, _ = restored
     if state is None:
-        state = init_growth_state(base_channels, weights, config, plane, rng=rng)
+        state = init_growth_state(
+            base_channels, weights, config, plane, rng=rng,
+            n_features=x_binned.shape[1],
+        )
 
     step = jax.jit(
         lambda xb, base, w, st: level_step(xb, base, w, st, config, plane)
@@ -627,7 +885,10 @@ def grow(
     of histogram + routing work for shallow-converging forests.
     """
     depth = config.max_depth
-    state = init_growth_state(base_channels, weights, config, plane, rng=rng)
+    state = init_growth_state(
+        base_channels, weights, config, plane, rng=rng,
+        n_features=x_binned.shape[1],
+    )
 
     def cond(state: GrowthState):
         more = state.level < depth

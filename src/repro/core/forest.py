@@ -24,8 +24,9 @@ import jax.numpy as jnp
 
 from .engine import (  # noqa: F401  (re-exported: training internals)
     LocalPlane, _gather_feature_bins, _rank_splits, _safe_mean,
-    chunked_level_scores, fused_level_scores, grow, grow_checkpointed,
-    init_forest,
+    chunked_level_scores, fused_level_scores, fused_reuse_level_scores,
+    grow, grow_checkpointed, init_forest, resolve_hist_reuse,
+    reuse_level_task_group,
 )
 from .histograms import class_channels, regression_channels
 from .types import Forest, ForestConfig

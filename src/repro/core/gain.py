@@ -190,6 +190,47 @@ def node_counts(scores: SplitScores, *, regression: bool = False) -> jnp.ndarray
     return scores.left_counts.sum(-1) + scores.right_counts.sum(-1)
 
 
+def sibling_plan(
+    scores: SplitScores,
+    split_rank: jnp.ndarray,   # [k, S] int32 dense rank of admitted splits, -1 else
+    is_split: jnp.ndarray,     # [k, S] bool
+    *,
+    n_ranks: int,              # R = ForestConfig.max_splits_per_level
+    regression: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Plan next level's sibling-subtraction reuse (``hist_reuse``).
+
+    For every admitted split rank r, record (a) which frontier slot is
+    its parent and (b) which child is the *smaller* one — the only child
+    the next level will histogram directly; the sibling is reconstructed
+    as ``parent - small``. "Smaller" means fewer weighted samples, read
+    off the winner's child counts the scoring cumsum already produced
+    (no extra pass); ties go left. Both tables are derived from the
+    post-``merge_winners`` scores, so every mesh shard plans the same
+    small side.
+
+    Returns ``(parent [k, R] int32 slot, -1 for unused ranks;
+    small_right [k, R] int32, 1 = right child is the small one)``.
+    """
+    k, S = split_rank.shape
+    R = n_ranks
+    if regression:
+        n_l, n_r = scores.left_counts[..., 0], scores.right_counts[..., 0]
+    else:
+        n_l, n_r = scores.left_counts.sum(-1), scores.right_counts.sum(-1)
+    sr_slot = (n_r < n_l).astype(jnp.int32)                   # [k, S]
+    # Rank -> slot scatter. Dense ranks are unique per tree; every
+    # non-admitted slot dumps into the sliced-off row R.
+    rank = jnp.where(is_split, split_rank, R)
+    t = jnp.arange(k)[:, None]
+    slots = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None, :], (k, S))
+    parent = jnp.full((k, R + 1), -1, jnp.int32).at[t, rank].set(slots)[:, :R]
+    small_right = (
+        jnp.zeros((k, R + 1), jnp.int32).at[t, rank].set(sr_slot)[:, :R]
+    )
+    return parent, small_right
+
+
 SPLIT_BACKENDS = ("auto", "pallas", "xla")
 
 

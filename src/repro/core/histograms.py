@@ -214,6 +214,100 @@ def blocked_level_histograms(
     return jax.lax.fori_loop(0, nb, body, init)
 
 
+# ---------------------------------------------------------------------------
+# Sibling-subtraction histogram reuse (ForestConfig.hist_reuse)
+# ---------------------------------------------------------------------------
+#
+# ``hist(parent) = hist(left) + hist(right)`` holds *bitwise* for the
+# integer DSI counts (every partial sum is an exact f32 integer below
+# 2**24 — the same argument that makes blocked accumulation exact), so a
+# level's T_GR only needs to histogram the samples routed to the
+# *smaller* child of each split; the sibling is ``parent - small``.
+#
+# Layout: splits admitted at the previous level carry dense ranks
+# ``r in [0, n_splits)`` (``engine._rank_splits``) and their children
+# occupy frontier slots ``2r`` / ``2r + 1``. The reuse path histograms
+# into R = max_splits_per_level **rank segments** (samples in large
+# slots are parked to the dump segment — the same masking machinery the
+# early-exit scheduler uses for dead trees), which
+#
+# * halves the one-hot matmul width of the pallas T_GR kernel,
+# * halves the scatter segment count of the segment_sum backend, and
+# * halves the tensor the mesh plane's psum / psum_scatter moves
+#   (``sibling_expand`` runs post-combine, so all shards agree).
+#
+# ``sibling_expand`` then rebuilds a full S-row tensor in *rank-paired*
+# row order — rows [0, R) are the small children, rows [R, 2R) their
+# subtraction-reconstructed siblings — NOT slot order: reordering the
+# O(k*S) split descriptors after scoring (``sibling_perm``) is free,
+# reordering the [k, S, F, B, C] tensor is a full extra memory pass.
+# Unoccupied rows are exactly zero (invalid ranks contribute no samples
+# and force ``large = 0``), matching what direct histogramming produces
+# for empty slots — which is why reuse-on forests are bit-identical to
+# reuse-off on every plane.
+
+
+def sibling_segments(
+    sample_slot: jnp.ndarray,    # [k, N] int32 frontier slots, -1 parked
+    small_right: jnp.ndarray,    # [k, R] int32, 1 = right child is smaller
+) -> jnp.ndarray:
+    """Rank segment of each sample: ``slot // 2`` when the sample's slot
+    is the *small* child of its pair, -1 (dump) otherwise.
+
+    At level 0 the init cache (``small_right = 0``) makes slot 0 the
+    "small" side of rank 0, so the whole dataset lands in segment 0 —
+    the root histogram needs no special case.
+    """
+    R = small_right.shape[1]
+    live = sample_slot >= 0
+    s = jnp.where(live, sample_slot, 0)
+    r = s // 2
+    side = s - 2 * r
+    sr = jnp.take_along_axis(small_right, jnp.minimum(r, R - 1), axis=1)
+    keep = live & (side == sr) & (r < R)
+    return jnp.where(keep, r, -1).astype(jnp.int32)
+
+
+def sibling_perm(small_right: jnp.ndarray, n_slots: int) -> jnp.ndarray:
+    """Slot -> paired-row permutation [k, S]: slot ``2r + side`` reads
+    row ``r`` (small) or ``R + r`` (large); slots past ``2R`` read
+    themselves (their rows are zero either way)."""
+    k, R = small_right.shape
+    s = jnp.arange(n_slots, dtype=jnp.int32)[None, :]
+    r = jnp.minimum(s // 2, R - 1)
+    side = s - 2 * r
+    sr = jnp.take_along_axis(small_right, r, axis=1)
+    pair = jnp.where(side == sr, r, R + r)
+    return jnp.where(s < 2 * R, pair, s).astype(jnp.int32)
+
+
+def sibling_expand(
+    packed: jnp.ndarray,        # [k, R, F, B, C] small-child histograms
+    cache_hist: jnp.ndarray,    # [k, S, F, B, C] previous level, paired rows
+    cache_perm: jnp.ndarray,    # [k, S] previous level's slot -> row map
+    parent: jnp.ndarray,        # [k, R] parent *slot* of each rank, -1 invalid
+    n_slots: int,
+) -> jnp.ndarray:
+    """Rebuild the full level histogram from small-child segments:
+    rows [0, R) = ``packed``, rows [R, 2R) = ``parent - packed`` (the
+    large siblings), rows [2R, S) = zero. Returns [k, S, F, B, C] in
+    rank-paired row order (see module comment; ``sibling_perm`` maps
+    slots to rows)."""
+    k, R = parent.shape
+    valid = parent >= 0
+    rows = jnp.take_along_axis(cache_perm, jnp.where(valid, parent, 0), axis=1)
+    parent_h = jnp.take_along_axis(
+        cache_hist, rows[:, :, None, None, None], axis=1
+    )
+    large = jnp.where(
+        valid[:, :, None, None, None], parent_h - packed, 0.0
+    )
+    hist = jnp.concatenate([packed, large], axis=1)
+    if 2 * R < n_slots:
+        hist = jnp.pad(hist, ((0, 0), (0, n_slots - 2 * R)) + ((0, 0),) * 3)
+    return hist[:, :n_slots]
+
+
 def class_channels(y: jnp.ndarray, n_classes: int) -> jnp.ndarray:
     """onehot(y) -> [N, C] float32."""
     return jax.nn.one_hot(y, n_classes, dtype=jnp.float32)

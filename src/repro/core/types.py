@@ -99,6 +99,25 @@ class ForestConfig:
     # --- §Perf optimizations (beyond-paper; see EXPERIMENTS.md §Perf) ------
     packed_hist: bool = False         # class index folded into segment ids
     hist_reduce: str = "psum"         # psum | psum_scatter (distributed T_GR)
+    # Sibling-subtraction histogram reuse (PERF.md §Histogram reuse):
+    # between levels the engine carries the previous level's per-slot
+    # histograms, histograms ONLY samples routed to the *smaller* child
+    # of each split, and reconstructs every large child as
+    # ``parent - small_sibling`` — halving T_GR's histogram build (and,
+    # on the mesh plane, the psum/psum_scatter volume: only the packed
+    # small-child partials cross the wire). Exact for classification
+    # (integer DSI counts: ``hist(parent) = hist(left) + hist(right)``
+    # holds bitwise below 2**24), so "on" forests are bit-identical to
+    # "off" on every plane; regression channels ([1, y, y^2] f32 sums)
+    # only agree to float rounding, so:
+    #   "auto" — reuse for classification, off for regression;
+    #   "on"   — always (regression is an explicit tolerance opt-in);
+    #   "off"  — never.
+    # The carried cache costs k*S*F*B*C f32 of HBM (updated slab-by-slab
+    # on the fused path); when that exceeds ``hist_reuse_budget_mb`` the
+    # engine falls back to "off" (engine.resolve_hist_reuse).
+    hist_reuse: str = "auto"
+    hist_reuse_budget_mb: int = 256   # cache budget gate for hist_reuse
     # Backend "auto" resolution (all three knobs below): pallas ONLY when
     # `jax.default_backend() == "tpu"`, the XLA oracle everywhere else.
     # Off-TPU the pallas kernels exist solely in `interpret=True`
@@ -140,12 +159,26 @@ class ForestConfig:
             raise ValueError(
                 f"bin_fit must be 'auto', 'exact' or 'blocked', got {self.bin_fit!r}"
             )
+        if self.hist_reuse not in ("auto", "on", "off"):
+            raise ValueError(
+                f"hist_reuse must be 'auto', 'on' or 'off', got {self.hist_reuse!r}"
+            )
 
     def resolved_bin_fit(self) -> str:
         """Resolve bin_fit='auto': blocked iff the trainer streams blocks."""
         if self.bin_fit != "auto":
             return self.bin_fit
         return "blocked" if self.sample_block > 0 else "exact"
+
+    def resolved_hist_reuse(self) -> str:
+        """Resolve hist_reuse='auto': reuse is bitwise-exact only for
+        integer classification counts, so auto enables it for
+        classification and keeps regression (float channel sums) off.
+        The shape-dependent cache budget gate is applied downstream
+        (``engine.resolve_hist_reuse``)."""
+        if self.hist_reuse != "auto":
+            return self.hist_reuse
+        return "off" if self.regression else "on"
 
     @property
     def frontier(self) -> int:
@@ -217,3 +250,13 @@ class GrowthState:
     sample_slot: jnp.ndarray   # [k, N] frontier slot of each sample, -1 parked
     rng: jnp.ndarray           # PRNGKey (reserved for stochastic split policies)
     level: jnp.ndarray         # scalar int32 — next level to grow
+    # Sibling-subtraction histogram cache (``config.hist_reuse``): the
+    # previous level's post-combine per-slot histograms in rank-paired
+    # row order plus the slot->row permutation and the next level's
+    # parent/small-side tables (see ``engine.resolve_hist_reuse`` /
+    # ``histograms.sibling_expand``). ``None`` when reuse is off — a
+    # None leaf is an empty pytree, so off-mode states, jaxprs and
+    # checkpoints are unchanged. As a pytree leaf the cache rides every
+    # carry (``lax.while_loop``, jit boundaries, ``CheckpointManager``),
+    # which is what keeps ``resume_from`` bit-identical with reuse on.
+    hist_cache: Optional[dict] = None

@@ -41,6 +41,16 @@ fused traversal+voting path (``ForestConfig.predict_backend``):
   flip that drops zero in-flight futures (the old service drains with
   the old model). tests/test_serving.py pins all of it.
 
+* **Cache-aside result cache** — an optional per-service LRU
+  (``cache_size`` entries) keyed by a SHA-1 digest of the submitted
+  row batch (bytes + shape + dtype). A hit returns the stored
+  prediction bitwise-identically with zero device work — it is checked
+  before the circuit breaker, so hot rows keep serving even while the
+  model is failing. Hit/miss/eviction counters surface in ``health()``
+  and ``stats()``; :class:`ModelRegistry.publish` explicitly
+  invalidates the outgoing service's cache at hot-swap so a retired
+  fallback never compounds a stale model with stale cached rows.
+
 * **Degraded mode** — per-request deadlines bound queue staleness
   (:class:`DeadlineExceeded`, settled through the future at drain); a
   per-client token-bucket :class:`RateLimiter` sheds abusive clients in
@@ -52,8 +62,10 @@ fused traversal+voting path (``ForestConfig.predict_backend``):
 """
 from __future__ import annotations
 
+import hashlib
 import threading
 import time
+from collections import OrderedDict
 from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -287,6 +299,7 @@ class PRFService:
         breaker: Optional[CircuitBreaker] = None,
         rate_limiter: Optional[RateLimiter] = None,
         default_deadline: Optional[float] = None,
+        cache_size: int = 0,
         clock: Callable[[], float] = time.monotonic,
     ):
         if max_batch & (max_batch - 1) or min_bucket & (min_bucket - 1):
@@ -329,6 +342,17 @@ class PRFService:
         self._lock = threading.Lock()
         self._closed = False
         self._buckets_seen: set = set()
+        # Cache-aside result cache: digest of the request batch -> its
+        # prediction. cache_size=0 disables it entirely (no hashing
+        # cost). Entries hold private copies so a caller mutating its
+        # input or output array can never poison a later hit.
+        if cache_size < 0:
+            raise ValueError(f"cache_size must be >= 0, got {cache_size}")
+        self.cache_size = cache_size
+        self._cache: "OrderedDict[bytes, np.ndarray]" = OrderedDict()
+        self._cache_hits = 0
+        self._cache_misses = 0
+        self._cache_evictions = 0
         self._requests_served = 0
         self._requests_shed = 0
         self._requests_cancelled = 0
@@ -385,6 +409,43 @@ class PRFService:
             raise ValueError("empty request")
         return x
 
+    # -- cache-aside result cache ----------------------------------------
+
+    @staticmethod
+    def _cache_key(x: np.ndarray) -> bytes:
+        h = hashlib.sha1()
+        h.update(str(x.dtype).encode())
+        h.update(np.asarray(x.shape, np.int64).tobytes())
+        h.update(np.ascontiguousarray(x).tobytes())
+        return h.digest()
+
+    def _cache_get(self, key: bytes) -> Optional[np.ndarray]:
+        with self._lock:
+            out = self._cache.get(key)
+            if out is None:
+                self._cache_misses += 1
+                return None
+            self._cache.move_to_end(key)
+            self._cache_hits += 1
+            return out.copy()
+
+    def _cache_put(self, key: bytes, out: np.ndarray) -> None:
+        with self._lock:
+            if key not in self._cache and len(self._cache) >= self.cache_size:
+                self._cache.popitem(last=False)
+                self._cache_evictions += 1
+            self._cache[key] = out.copy()
+            self._cache.move_to_end(key)
+
+    def invalidate_cache(self) -> int:
+        """Drop every cached prediction; returns how many were dropped.
+        Called by :class:`ModelRegistry.publish` on the outgoing
+        service at hot-swap."""
+        with self._lock:
+            n = len(self._cache)
+            self._cache.clear()
+            return n
+
     # -- direct (synchronous) path ---------------------------------------
 
     def predict(self, x: np.ndarray) -> np.ndarray:
@@ -396,9 +457,18 @@ class PRFService:
         probe); client-side :class:`ValueError`/``ServiceError`` never
         count as model failures. Stateless, so it stays usable after
         ``shutdown`` (only admission closes).
+
+        With ``cache_size > 0`` the batch digest is looked up first: a
+        hit returns the stored prediction bitwise-identically — before
+        the breaker, since no model work is needed.
         """
         squeeze = np.ndim(x) == 1
         x = self._validate(x)
+        key = self._cache_key(x) if self.cache_size > 0 else None
+        if key is not None:
+            hit = self._cache_get(key)
+            if hit is not None:
+                return hit[0] if squeeze else hit
         if not self.breaker.allow():
             raise CircuitOpenError(
                 f"circuit open after repeated model failures; retrying in "
@@ -419,6 +489,8 @@ class PRFService:
             self.breaker.record_failure()
             raise
         self.breaker.record_success()
+        if key is not None:
+            self._cache_put(key, out)
         return out[0] if squeeze else out
 
     def _predict_bucketed(self, xb: jnp.ndarray) -> np.ndarray:
@@ -594,6 +666,9 @@ class PRFService:
             "requests_cancelled": self._requests_cancelled,
             "requests_deadline_exceeded": self._requests_deadline_exceeded,
             "requests_rate_limited": self._requests_rate_limited,
+            "cache_hits": self._cache_hits,
+            "cache_misses": self._cache_misses,
+            "cache_evictions": self._cache_evictions,
             "breaker_state": self.breaker.state,
             "closed": self._closed,
             "pending": self.pending,
@@ -621,6 +696,11 @@ class PRFService:
                 "cancelled": self._requests_cancelled,
                 "deadline_exceeded": self._requests_deadline_exceeded,
                 "rate_limited": self._requests_rate_limited,
+                "cache_size": self.cache_size,
+                "cache_entries": len(self._cache),
+                "cache_hits": self._cache_hits,
+                "cache_misses": self._cache_misses,
+                "cache_evictions": self._cache_evictions,
                 "quarantined_blocks": (
                     0 if q is None else len(q.quarantined)
                 ),
@@ -663,7 +743,10 @@ class ModelRegistry:
         """Swap in ``model`` (constructor kwargs: registry defaults +
         ``overrides``). Returns its version number. The previous
         version is drained (every pending future resolves against the
-        model it was submitted to) and closed to new submits."""
+        model it was submitted to) and closed to new submits. The old
+        service's result cache is invalidated: a retired fallback
+        answering during degraded mode recomputes every row rather than
+        compounding a stale model with stale cached predictions."""
         svc = PRFService(model, **{**self._service_opts, **overrides})
         with self._lock:
             version = self._next_version
@@ -674,6 +757,7 @@ class ModelRegistry:
                 self._retired[old[0]] = old[1]
         if old is not None:
             old[1].shutdown(drain=True)
+            old[1].invalidate_cache()
         return version
 
     @property

@@ -594,3 +594,93 @@ def test_sharded_vote_matches_single_host_bit_for_bit():
     res = json.loads(out.stdout.strip().splitlines()[-1])
     assert res["cls_equal"], "sharded classification labels differ from single-host"
     assert res["reg_close"], "sharded regression values differ from single-host"
+
+
+# ---------------------------------------------------------------------------
+# Cache-aside result cache
+# ---------------------------------------------------------------------------
+
+
+def test_cache_hit_bitwise_identical_and_counted(served_model):
+    model, xte = served_model
+    svc = PRFService(model, cache_size=4)
+    b = np.asarray(xte[:16])
+    first = svc.predict(b)
+    again = svc.predict(b.copy())            # same bytes, different buffer
+    np.testing.assert_array_equal(first, again)
+    h = svc.health()
+    assert (h["cache_hits"], h["cache_misses"], h["cache_entries"]) == (1, 1, 1)
+    # Different shape / different rows are distinct keys.
+    svc.predict(b[:8])
+    svc.predict(np.asarray(xte[16:32]))
+    assert svc.health()["cache_entries"] == 3
+    assert svc.stats()["cache_misses"] == 3
+
+
+def test_cache_lru_evicts_oldest_and_refreshes_on_hit(served_model):
+    model, xte = served_model
+    svc = PRFService(model, cache_size=2)
+    a, b, c = (np.asarray(xte[i : i + 8]) for i in (0, 8, 16))
+    svc.predict(a)
+    svc.predict(b)
+    svc.predict(a)                           # hit: refreshes a's recency
+    svc.predict(c)                           # evicts b (LRU), not a
+    h = svc.health()
+    assert (h["cache_evictions"], h["cache_entries"]) == (1, 2)
+    svc.predict(a)
+    assert svc.health()["cache_hits"] == 2   # a survived the eviction
+
+
+def test_cache_disabled_by_default(served_model):
+    model, xte = served_model
+    svc = PRFService(model)
+    svc.predict(np.asarray(xte[:8]))
+    svc.predict(np.asarray(xte[:8]))
+    h = svc.health()
+    assert (h["cache_size"], h["cache_hits"], h["cache_misses"]) == (0, 0, 0)
+    with pytest.raises(ValueError):
+        PRFService(model, cache_size=-1)
+
+
+def test_cache_serves_hot_rows_while_circuit_open(served_model):
+    """The cache check runs before the breaker: a cached batch keeps
+    answering (bitwise) while the model is failing, an uncached one
+    sheds with CircuitOpenError."""
+    model, xte = served_model
+    svc = PRFService(model, cache_size=4,
+                     breaker=CircuitBreaker(failure_threshold=1))
+    hot = np.asarray(xte[:16])
+    want = svc.predict(hot)
+    svc.breaker.record_failure()             # opens the circuit
+    assert svc.breaker.state == "open"
+    np.testing.assert_array_equal(svc.predict(hot), want)
+    with pytest.raises(CircuitOpenError):
+        svc.predict(np.asarray(xte[16:32]))
+
+
+def test_cache_immune_to_caller_mutation(served_model):
+    """Entries are private copies: mutating a returned (or input) array
+    must not poison later hits."""
+    model, xte = served_model
+    svc = PRFService(model, cache_size=4)
+    b = np.asarray(xte[:16])
+    want = svc.predict(b).copy()
+    svc.predict(b)[:] = -7                   # scribble on a hit's output
+    b_bytes = b.tobytes()
+    np.testing.assert_array_equal(svc.predict(b), want)
+    assert b.tobytes() == b_bytes
+
+
+def test_registry_hot_swap_invalidates_old_cache(served_model):
+    model, xte = served_model
+    reg = ModelRegistry(cache_size=4)
+    reg.publish(model)
+    old = reg.service
+    reg.predict(np.asarray(xte[:16]))
+    assert old.health()["cache_entries"] == 1
+    reg.publish(model)
+    assert old.health()["cache_entries"] == 0
+    # The new version starts cold and fills its own (bulkheaded) cache.
+    reg.predict(np.asarray(xte[:16]))
+    h = reg.health()["live"]
+    assert (h["cache_entries"], h["cache_hits"]) == (1, 0)
