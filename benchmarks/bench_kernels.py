@@ -14,6 +14,7 @@ PRs (see PERF.md).
 """
 import dataclasses
 import json
+import os
 import subprocess
 import sys
 import textwrap
@@ -182,6 +183,85 @@ def run_comm_reuse():
         "collective_mb_off": mb["off"],
         "collective_mb_on": mb["on"],
         "on_over_off": mb["on"] / max(mb["off"], 1e-9),
+    }]
+
+
+def run_comm_multiproc():
+    """``comm_multiproc``: cross-host collective volume of the
+    multi-process training plane (deterministic HLO byte counts, no
+    timing). Two coordinator-connected processes x 2 devices AOT-lower
+    the two collectives every level pays on that plane — the data-axis
+    histogram combine and the int64-limbed verdict/barrier psum
+    (``MultiHostMesh.psum_hosts``) — and parse per-device bytes from the
+    post-SPMD HLO."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["JAX_PLATFORMS"] = "cpu"
+        os.environ["XLA_FLAGS"] = ""
+        pid = int(os.environ["PRF_PID"])
+        nproc = int(os.environ["PRF_NPROC"])
+        from repro.launch import multiproc
+        multiproc.initialize("127.0.0.1:" + os.environ["PRF_PORT"],
+                             nproc, pid, local_device_count=2)
+        import json
+        import jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+        from repro.core.distributed import _shard_map
+        from repro.launch.multiproc import MultiHostMesh
+        from repro.roofline.analysis import analyze_hlo_text
+
+        rt = MultiHostMesh()
+        K, S, F, B, C = 8, 32, 32, 16, 3
+        D = rt.n_data_shards
+        # The per-level histogram combine: [D, k, S, F, B, C] carries
+        # sharded over the data axis, summed across hosts.
+        hist = jax.ShapeDtypeStruct((D, K, S, F, B, C), jnp.float32)
+        fn = jax.jit(_shard_map(
+            lambda h: jax.lax.psum(h[0], "data"),
+            mesh=rt.mesh,
+            in_specs=(P("data", None, None, "model"),),
+            out_specs=P(None, None, "model"),
+        ))
+        a_hist = analyze_hlo_text(fn.lower(hist).compile().as_text())
+        # The limbed int64 union (validation verdicts, barriers):
+        # [D, n, 3] int32 over the same axis.
+        vec = jax.ShapeDtypeStruct((D, 1024, 3), jnp.int32)
+        fn2 = jax.jit(_shard_map(
+            lambda x: jax.lax.psum(x[0], "data"),
+            mesh=rt.mesh, in_specs=(P("data",),), out_specs=P(),
+        ))
+        a_vec = analyze_hlo_text(fn2.lower(vec).compile().as_text())
+        rt.barrier()
+        if pid == 0:
+            print("RESULT" + json.dumps({
+                "hist_mb": a_hist["collective_bytes"] / 2**20,
+                "hist_ops": {k: int(v["count"])
+                             for k, v in a_hist["collectives"].items()},
+                "verdict_kb": a_vec["collective_bytes"] / 2**10,
+            }), flush=True)
+    """)
+    procs = [
+        subprocess.Popen(
+            [sys.executable, "-c", code],
+            env={**os.environ, "PRF_PID": str(i), "PRF_NPROC": "2",
+                 "PRF_PORT": "12963"},
+            stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True,
+        )
+        for i in range(2)
+    ]
+    outs = [p.communicate(timeout=1800)[0] for p in procs]
+    if any(p.returncode != 0 for p in procs):
+        return [{"bench": "comm_multiproc",
+                 "error": (outs[0] + outs[1])[-500:], "us_per_call": 0.0}]
+    line = [ln for ln in outs[0].splitlines() if ln.startswith("RESULT")][-1]
+    r = json.loads(line[len("RESULT"):])
+    return [{
+        "bench": "comm_multiproc",
+        "us_per_call": 0.0,
+        "derived": "k=8,S=32,F=32,B=16,C=3,procs=2x2dev,psum",
+        "hist_collective_mb_per_device": r["hist_mb"],
+        "hist_collective_ops": r["hist_ops"],
+        "verdict_collective_kb_per_device": r["verdict_kb"],
     }]
 
 
@@ -416,7 +496,8 @@ def run():
     rng = np.random.default_rng(0)
     rows = (
         run_level_hist() + run_level_hist_reuse() + run_comm_reuse()
-        + run_level_scores() + run_predict() + run_binning()
+        + run_comm_multiproc() + run_level_scores() + run_predict()
+        + run_binning()
     )
 
     N, F, S, B, C = 2048, 128, 4, 16, 4

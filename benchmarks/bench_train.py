@@ -20,6 +20,11 @@ series (see PERF.md); CI fails the kernels-bench job if the streamed
 rows go missing.
 """
 import dataclasses
+import json
+import os
+import subprocess
+import sys
+import textwrap
 import time
 
 import jax
@@ -37,6 +42,75 @@ from repro.data.tabular import make_classification
 K, N, F, B, C, DEPTH = 8, 4096, 32, 16, 3, 6
 N_BLOCKS = 4
 SHAPE = f"k={K},N={N},F={F},B={B},C={C},depth={DEPTH}"
+
+# Multi-process plane worker: one coordinator-connected jax.distributed
+# process of the 2x2 drill, timing the full train_prf_multiproc pipeline
+# (screen -> sharded sketch merge -> local binning -> growth) on the
+# same global shape as train_e2e_streamed. Spawned twice by
+# run_multiproc(); process 0 prints the warm-call RESULT line.
+_MP_CODE = textwrap.dedent("""
+    import os
+    os.environ["JAX_PLATFORMS"] = "cpu"
+    os.environ["XLA_FLAGS"] = ""
+    pid = int(os.environ["PRF_PID"])
+    nproc = int(os.environ["PRF_NPROC"])
+    from repro.launch import multiproc
+    multiproc.initialize("127.0.0.1:" + os.environ["PRF_PORT"],
+                         nproc, pid, local_device_count=2)
+    import json, time
+    from repro.core.distributed import train_prf_multiproc
+    from repro.core.types import ForestConfig
+    from repro.data.tabular import make_classification
+    from repro.launch.multiproc import MultiHostMesh
+
+    K, N, F, B, C, DEPTH = 8, 4096, 32, 16, 3, 6
+    x, y = make_classification(
+        n_samples=N, n_features=F, n_classes=C, n_informative=8, seed=5
+    )
+    cfg = ForestConfig(n_trees=K, max_depth=DEPTH, n_bins=B, n_classes=C,
+                       feature_mode="all", weighted_voting=False,
+                       sample_block=N // 4)
+    rt = MultiHostMesh()
+    train_prf_multiproc(x, y, cfg, seed=0, runtime=rt)  # warm jit caches
+    t0 = time.time()
+    train_prf_multiproc(x, y, cfg, seed=0, runtime=rt)
+    us = (time.time() - t0) * 1e6
+    rt.barrier()
+    if pid == 0:
+        print("RESULT" + json.dumps(
+            {"us_per_call": us, "feed_bytes": int(rt.feed_bytes)}
+        ), flush=True)
+""")
+
+
+def run_multiproc(streamed_us):
+    """``train_e2e_multiproc``: the 2-process x 2-device training plane
+    end to end — each process feeds only its local half of the rows;
+    ``single_process_streamed_us`` carries the single-process streamed
+    growth time of the same global shape for the trajectory table."""
+    port = "12961"
+    procs = [
+        subprocess.Popen(
+            [sys.executable, "-c", _MP_CODE],
+            env={**os.environ, "PRF_PID": str(i), "PRF_NPROC": "2",
+                 "PRF_PORT": port},
+            stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True,
+        )
+        for i in range(2)
+    ]
+    outs = [p.communicate(timeout=1800)[0] for p in procs]
+    if any(p.returncode != 0 for p in procs):
+        return [{"bench": "train_e2e_multiproc",
+                 "error": (outs[0] + outs[1])[-500:], "us_per_call": 0.0}]
+    line = [ln for ln in outs[0].splitlines() if ln.startswith("RESULT")][-1]
+    r = json.loads(line[len("RESULT"):])
+    return [{
+        "bench": "train_e2e_multiproc",
+        "us_per_call": r["us_per_call"],
+        "derived": f"{SHAPE},blocks={N_BLOCKS},procs=2x2dev,full_prf_path",
+        "feed_mb_per_proc": r["feed_bytes"] / 2**20,
+        "single_process_streamed_us": streamed_us,
+    }]
 
 
 def _time(fn, reps=3):
@@ -242,4 +316,5 @@ def run():
         "fixed_depth_us": us_fx,
         "speedup_vs_fixed": us_fx / max(us_ee, 1e-9),
     })
+    rows.extend(run_multiproc(us_streamed))
     return rows

@@ -43,6 +43,36 @@ class CheckpointCorruptionError(RuntimeError):
     training state."""
 
 
+class CheckpointTopologyError(RuntimeError):
+    """A checkpoint was written by a different process topology than the
+    one restoring it (e.g. a 2-process manifest restored into a single
+    process, or vice versa). Deliberately NOT a
+    :class:`CheckpointCorruptionError`: ``restore_latest_valid`` walks
+    back past *corrupt* steps, but a topology mismatch applies to every
+    step in the directory — walking back would silently retrain from an
+    older carry, so this propagates instead. Resume on the topology that
+    saved, or start fresh with a new checkpoint directory."""
+
+
+def _check_topology(manifest: dict, path: str) -> None:
+    """Refuse to restore across a changed process count.
+
+    Single-process manifests carry no ``topology`` key (byte-compatible
+    with every pre-multiproc checkpoint) and imply ``process_count=1``;
+    multi-process manifests record the saving process count. Either
+    direction of mismatch raises :class:`CheckpointTopologyError` —
+    never a silently wrong forest."""
+    saved = manifest.get("topology", {}).get("process_count", 1)
+    now = jax.process_count()
+    if int(saved) != now:
+        raise CheckpointTopologyError(
+            f"checkpoint {path} was saved by {saved} process(es) but this "
+            f"runtime has {now} — per-host shard leaves do not transfer "
+            "across process counts; resume on the saving topology or start "
+            "a fresh checkpoint directory"
+        )
+
+
 def _flatten(tree):
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     out = []
@@ -163,6 +193,7 @@ def verify_checkpoint(directory: str, step: int) -> None:
     :class:`CheckpointCorruptionError` on the first failure."""
     path = os.path.join(directory, f"step_{step:08d}")
     manifest = _load_manifest(path)
+    _check_topology(manifest, path)
     for entry in manifest["leaves"]:
         _load_leaf(path, entry)
 
@@ -186,6 +217,7 @@ def restore_checkpoint(
             raise FileNotFoundError(f"no checkpoints in {directory}")
     path = os.path.join(directory, f"step_{step:08d}")
     manifest = _load_manifest(path)
+    _check_topology(manifest, path)
 
     flat, treedef = _flatten(tree_like)
     by_key = {e["key"]: e for e in manifest["leaves"]}

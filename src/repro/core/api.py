@@ -183,6 +183,20 @@ def train_prf(
     **bitwise identical** with validation on or off.
     """
     config = config.resolved(x.shape[1])
+    if jax.process_count() > 1:
+        # Multi-process runtime (launch.multiproc.initialize was called):
+        # every process runs the same train_prf call collectively, each
+        # feeding only its local rows. Bitwise identical to the
+        # single-process planes.
+        from .distributed import train_prf_multiproc
+
+        return train_prf_multiproc(
+            x, y, config, seed,
+            checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every,
+            checkpoint_keep=checkpoint_keep, resume_from=resume_from,
+            on_level=on_level, feeder_opts=feeder_opts,
+            bad_block_policy=bad_block_policy,
+        )
     if config.sample_block > 0:
         return _train_prf_streamed(
             x, y, config, seed,

@@ -387,6 +387,9 @@ def grow_forest_streamed_sharded(
     resume_from: Optional[str] = None,
     on_level=None,
     feeder_opts: Optional[dict] = None,
+    quarantined: Sequence[int] = (),
+    runtime=None,
+    block_sizes: Optional[Sequence[int]] = None,
 ) -> Forest:
     """Out-of-core growth on the **mesh** plane — the streaming data
     plane composed with ``MeshPlane``'s collectives, lifting the
@@ -417,17 +420,48 @@ def grow_forest_streamed_sharded(
     restores the latest carry — slot tables back to their
     ``P(None, sample_axes)`` sharding — and the level loop continues
     where it stopped, bit-identically. ``feeder_opts`` forwards
-    retry/backoff/fault-injection knobs to the ``BlockFeeder``.
+    retry/backoff/fault-injection knobs to the ``BlockFeeder``;
+    ``quarantined`` block indices are dropped from every sweep.
+
+    **Multi-process plane.** With ``runtime`` (a
+    ``launch.multiproc.MultiHostMesh``) the same driver runs across
+    ``jax.distributed`` processes: ``x_binned`` is then the list of
+    per-block **host-local padded row slices** (each process holds only
+    its own rows — see ``MultiHostMesh.local_row_range``), and
+    ``block_sizes`` gives the global unpadded block sizes the local
+    slices came from. Every device array is constructed through the
+    runtime's addressable-slice ``put`` — blocks via a shard-aware
+    feeder placement, carries via ``zeros`` — so no host ever
+    materializes a global row range, while the jitted kernels (and
+    therefore the forest, bitwise) are identical to the single-process
+    mesh. Checkpoints go through the multi-process manager/restore
+    (process-0 manifest, per-host shard leaves).
     """
     from .api import _stream_setup
 
     sample_axes = tuple(sample_axes)
-    feeder0, y_np, w_np, sizes, offsets = _stream_setup(
-        x_binned, y, weights, config, prefetch
-    )
+    if runtime is not None:
+        if block_sizes is None:
+            raise ValueError(
+                "grow_forest_streamed_sharded(runtime=...) needs "
+                "block_sizes — the global unpadded sizes the host-local "
+                "block slices were cut from"
+            )
+        sizes = [int(n) for n in block_sizes]
+        offsets = np.concatenate([[0], np.cumsum(sizes)])
+        y_np = np.asarray(y)
+        if config.regression:
+            y_np = y_np.astype(np.float32)
+        w_np = np.asarray(weights, dtype=np.float32)
+        local_blocks = list(x_binned)
+        F = local_blocks[0].shape[1]
+    else:
+        feeder0, y_np, w_np, sizes, offsets = _stream_setup(
+            x_binned, y, weights, config, prefetch
+        )
+        F = feeder0.blocks[0].shape[1]
     D = int(np.prod([mesh.shape[a] for a in sample_axes]))
     k, S = config.n_trees, config.frontier
-    F = feeder0.blocks[0].shape[1]
     B = config.n_bins
     C = 3 if config.regression else config.n_classes
 
@@ -465,32 +499,71 @@ def grow_forest_streamed_sharded(
     from ..data.pipeline import BlockFeeder
 
     pads = [(-n) % D for n in sizes]
-    feeder = BlockFeeder(
-        [_pad_rows(b, p) for b, p in zip(feeder0.blocks, pads)],
-        placement=x_sh, prefetch=prefetch, **(feeder_opts or {}),
-    )
-
+    ms = [n + p for n, p in zip(sizes, pads)]       # padded global rows
     from .api import _channels
 
     base_dev, w_dev, slot_dev = [], [], []
-    for i, p in enumerate(pads):
-        o0, o1 = offsets[i], offsets[i + 1]
-        # Channels built on device by the same _channels every other
-        # plane uses; pad rows are zero-weight + parked, so their
-        # channel content is irrelevant.
-        base_dev.append(_channels(
-            jax.device_put(_pad_rows(y_np[o0:o1], p), row_sh), config,
-        ))
-        w_dev.append(jax.device_put(_pad_rows(w_np[:, o0:o1].T, p).T, kn_sh))
-        slot0 = np.zeros((k, sizes[i] + p), np.int32)
-        slot0[:, sizes[i]:] = -1                    # pad rows stay parked
-        slot_dev.append(jax.device_put(slot0, kn_sh))
+    if runtime is not None:
+        x_spec = P(sample_axes, feature_axis)
+        feeder = BlockFeeder(
+            local_blocks,
+            placement=runtime.block_placement(ms, F, x_spec),
+            prefetch=prefetch, quarantined=quarantined,
+            **(feeder_opts or {}),
+        )
+        for i, m in enumerate(ms):
+            o0 = offsets[i]
+            lo, hi = runtime.local_row_range(m)
+            nreal = max(min(hi, sizes[i]) - lo, 0)   # local non-pad rows
+            yb = np.zeros((hi - lo,), y_np.dtype)
+            yb[:nreal] = y_np[o0 + lo:o0 + lo + nreal]
+            # Channels on the local rows only — _channels is row-wise,
+            # so this is the row slice of the single-process build.
+            ch = np.asarray(_channels(jnp.asarray(yb), config))
+            base_dev.append(runtime.put(
+                ch, (m,) + ch.shape[1:], P(sample_axes),
+                box=[(lo, hi)] + [(0, s) for s in ch.shape[1:]],
+            ))
+            wb = np.zeros((k, hi - lo), np.float32)
+            wb[:, :nreal] = w_np[:, o0 + lo:o0 + lo + nreal]
+            w_dev.append(runtime.put(
+                wb, (k, m), P(None, sample_axes), box=[(0, k), (lo, hi)],
+            ))
+            slot0 = np.zeros((k, hi - lo), np.int32)
+            slot0[:, max(sizes[i] - lo, 0):] = -1    # pad rows stay parked
+            slot_dev.append(runtime.put(
+                slot0, (k, m), P(None, sample_axes), box=[(0, k), (lo, hi)],
+            ))
+    else:
+        feeder = BlockFeeder(
+            [_pad_rows(b, p) for b, p in zip(feeder0.blocks, pads)],
+            placement=x_sh, prefetch=prefetch, quarantined=quarantined,
+            **(feeder_opts or {}),
+        )
+        for i, p in enumerate(pads):
+            o0, o1 = offsets[i], offsets[i + 1]
+            # Channels built on device by the same _channels every other
+            # plane uses; pad rows are zero-weight + parked, so their
+            # channel content is irrelevant.
+            base_dev.append(_channels(
+                jax.device_put(_pad_rows(y_np[o0:o1], p), row_sh), config,
+            ))
+            w_dev.append(
+                jax.device_put(_pad_rows(w_np[:, o0:o1].T, p).T, kn_sh)
+            )
+            slot0 = np.zeros((k, sizes[i] + p), np.int32)
+            slot0[:, sizes[i]:] = -1                # pad rows stay parked
+            slot_dev.append(jax.device_put(slot0, kn_sh))
 
     mask_np = (
         np.ones((k, F), bool) if feature_mask is None
         else np.asarray(feature_mask, bool)
     )
-    mask_dev = jax.device_put(mask_np, NamedSharding(mesh, P(None, feature_axis)))
+    mask_dev = (
+        runtime.put_full(mask_np, P(None, feature_axis))
+        if runtime is not None
+        else jax.device_put(mask_np, NamedSharding(mesh, P(None, feature_axis)))
+    )
 
     def make_plane(Fl, mask_loc=None):
         return MeshPlane(
@@ -613,9 +686,13 @@ def grow_forest_streamed_sharded(
 
     plan_init, plan_next = make_plan(True), make_plan(False)
 
-    hist0 = jax.device_put(
-        jnp.zeros((D, k, n_rows, F, B, C), jnp.float32),
-        NamedSharding(mesh, hist_spec),
+    hist0 = (
+        runtime.zeros((D, k, n_rows, F, B, C), hist_spec, jnp.float32)
+        if runtime is not None
+        else jax.device_put(
+            jnp.zeros((D, k, n_rows, F, B, C), jnp.float32),
+            NamedSharding(mesh, hist_spec),
+        )
     )
 
     state = None
@@ -633,30 +710,46 @@ def grow_forest_streamed_sharded(
         shardings["slots"] = [kn_sh for _ in like["slots"]]
         if reuse:
             shardings["hist_cache"] = cache_sh
-        restored = restore_latest_valid(like, resume_from, shardings)
+        if runtime is not None:
+            from ..launch.multiproc import restore_latest_valid_multiproc
+
+            restored = restore_latest_valid_multiproc(
+                like, resume_from, shardings, runtime
+            )
+        else:
+            restored = restore_latest_valid(like, resume_from, shardings)
         if restored is not None:
             state, _ = restored
     if state is not None:
         forest, slot_node = state["forest"], state["slot_node"]
         scores, split_rank = state["scores"], state["split_rank"]
-        slot_dev, start = list(state["slots"]), int(state["level"])
+        slot_dev, start = list(state["slots"]), int(np.asarray(state["level"]))
         cache = state.get("hist_cache") if reuse else None
     else:
-        slot_node = jax.device_put(
-            jnp.full((k, S), -1, jnp.int32).at[:, 0].set(0), rep_sh
+        slot0_np = np.full((k, S), -1, np.int32)
+        slot0_np[:, 0] = 0
+        slot_node = (
+            runtime.put_full(slot0_np, P()) if runtime is not None
+            else jax.device_put(jnp.asarray(slot0_np), rep_sh)
         )
         forest, scores, split_rank = None, None, None
         start = 0
-        # Global cache width F — device_put shards dim 2 per cache_sh.
-        cache = (
-            jax.device_put(init_hist_cache(config, F), cache_sh)
-            if reuse else None
-        )
+        # Global cache width F — sharded per cache_sh (dim 2).
+        if reuse:
+            cache0 = init_hist_cache(config, F)
+            cache = (
+                {n: runtime.put_full(np.asarray(v), cache_specs[n])
+                 for n, v in cache0.items()}
+                if runtime is not None
+                else jax.device_put(cache0, cache_sh)
+            )
+        else:
+            cache = None
 
     def level_sweep(route: bool):
         hist = hist0
         sr = ((cache["small_right"],) if reuse else ())
-        for i, xb_b in enumerate(feeder.sweep()):
+        for i, xb_b in zip(feeder.live_blocks, feeder.sweep()):
             if route:
                 hist, slot_dev[i] = step_route(
                     hist, xb_b, base_dev[i], w_dev[i], slot_dev[i],
@@ -676,15 +769,21 @@ def grow_forest_streamed_sharded(
             hist = level_sweep(route=level > 0)
             plan = plan_next if forest is not None else plan_init
             if forest is None:
-                forest = jax.device_put(init_forest(config), rep_sh)
+                f0 = init_forest(config)
+                forest = (
+                    jax.tree_util.tree_map(
+                        lambda a: runtime.put_full(np.asarray(a), P()), f0
+                    )
+                    if runtime is not None else jax.device_put(f0, rep_sh)
+                )
             if reuse:
                 forest, scores, split_rank, slot_node, cache = plan(
-                    hist, forest, slot_node, jnp.asarray(level, jnp.int32),
+                    hist, forest, slot_node, np.int32(level),
                     mask_dev, cache,
                 )
             else:
                 forest, scores, split_rank, slot_node = plan(
-                    hist, forest, slot_node, jnp.asarray(level, jnp.int32),
+                    hist, forest, slot_node, np.int32(level),
                     mask_dev,
                 )
             if manager is not None:
@@ -692,7 +791,7 @@ def grow_forest_streamed_sharded(
                     "forest": forest, "slot_node": slot_node,
                     "scores": scores, "split_rank": split_rank,
                     "slots": slot_dev, "hist_cache": cache,
-                    "level": jnp.asarray(level + 1, jnp.int32),
+                    "level": np.int32(level + 1),
                 }, level + 1)
             if on_level is not None:
                 on_level(level + 1, forest)
@@ -706,7 +805,13 @@ def grow_forest_streamed_sharded(
             root_fn = jax.jit(_shard_map(
                 root_kernel, mesh=mesh, in_specs=(hist_spec,), out_specs=P(),
             ))
-            root = root_fn(level_sweep(route=False))
+            # Host round-trip: the replicated root counts fetch cleanly
+            # on every process, and the .at[].set below then runs on
+            # purely local arrays (eager ops on multi-process global
+            # arrays would raise).
+            root = jnp.asarray(np.asarray(jax.device_get(
+                root_fn(level_sweep(route=False))
+            )))
             forest = init_forest(config)
             forest = dataclasses.replace(
                 forest, class_counts=forest.class_counts.at[:, 0].set(root)
@@ -717,6 +822,12 @@ def grow_forest_streamed_sharded(
                 )
     finally:
         feeder.close()
+    if runtime is not None:
+        # Forest leaves are fully replicated — pull them host-side so
+        # finalize_forest (eager jnp) runs on local arrays.
+        forest = jax.tree_util.tree_map(
+            lambda a: jnp.asarray(np.asarray(jax.device_get(a))), forest
+        )
     return finalize_forest(forest)
 
 
@@ -731,6 +842,11 @@ def oob_accuracy_streamed_sharded(
     sample_axes: Sequence[str] = ("data",),
     feature_axis: str = "model",
     prefetch: int = 2,
+    feeder_opts: Optional[dict] = None,
+    quarantined: Sequence[int] = (),
+    runtime=None,
+    block_sizes: Optional[Sequence[int]] = None,
+    invalid_masks: Optional[dict] = None,
 ) -> jnp.ndarray:
     """Eq. (8) over host sample blocks on the mesh — per block, each
     shard routes its slice and psums its [k] correct/OOB partial counts;
@@ -738,28 +854,61 @@ def oob_accuracy_streamed_sharded(
     result is bit-identical to resident ``_oob_weights_sharded`` /
     single-host ``oob_accuracy``). Padded rows are masked via an
     explicit validity channel (their zero weight would otherwise read
-    as OOB)."""
+    as OOB).
+
+    With ``runtime`` (``launch.multiproc.MultiHostMesh``) ``x_binned``
+    is each process's local row window of every padded block and
+    ``block_sizes`` the global unpadded sizes; labels/weights/validity
+    are placed as addressable slices and the replicated count outputs
+    accumulate host-side. ``invalid_masks[i]`` (a local bool mask over
+    block *i*'s window) zeroes extra rows out of the validity channel —
+    exact-integer sums make that bitwise identical to dropping those
+    rows, which is how the single-host path excludes imputed-label
+    samples."""
     from ..data.pipeline import BlockFeeder, stream_blocks
 
     sample_axes = tuple(sample_axes)
     y_np = np.asarray(y)
     w_np = np.asarray(weights, dtype=np.float32)
-    blocks = stream_blocks(
-        x_binned, sample_block, what="oob_accuracy_streamed_sharded",
-        n_y=y_np.shape[0], n_w=w_np.shape[1],
-    )
-    sizes = [b.shape[0] for b in blocks]
-    offsets = np.concatenate([[0], np.cumsum(sizes)])
     D = int(np.prod([mesh.shape[a] for a in sample_axes]))
+    if runtime is not None:
+        if block_sizes is None:
+            raise ValueError(
+                "oob_accuracy_streamed_sharded(runtime=...) needs "
+                "block_sizes — the global unpadded sizes the host-local "
+                "block slices were cut from"
+            )
+        blocks = list(x_binned)
+        sizes = [int(n) for n in block_sizes]
+    else:
+        blocks = stream_blocks(
+            x_binned, sample_block, what="oob_accuracy_streamed_sharded",
+            n_y=y_np.shape[0], n_w=w_np.shape[1],
+        )
+        sizes = [b.shape[0] for b in blocks]
+    offsets = np.concatenate([[0], np.cumsum(sizes)])
     pads = [(-n) % D for n in sizes]
+    ms = [n + p for n, p in zip(sizes, pads)]
 
     x_sh = NamedSharding(mesh, P(sample_axes, feature_axis))
     row_sh = NamedSharding(mesh, P(sample_axes))
     kn_sh = NamedSharding(mesh, P(None, sample_axes))
-    feeder = BlockFeeder(
-        [_pad_rows(np.asarray(b), p) for b, p in zip(blocks, pads)],
-        placement=x_sh, prefetch=prefetch,
-    )
+    if runtime is not None:
+        F = blocks[0].shape[1]
+        feeder = BlockFeeder(
+            blocks,
+            placement=runtime.block_placement(
+                ms, F, P(sample_axes, feature_axis)
+            ),
+            prefetch=prefetch, quarantined=quarantined,
+            **(feeder_opts or {}),
+        )
+    else:
+        feeder = BlockFeeder(
+            [_pad_rows(np.asarray(b), p) for b, p in zip(blocks, pads)],
+            placement=x_sh, prefetch=prefetch, quarantined=quarantined,
+            **(feeder_opts or {}),
+        )
 
     def kernel(xb_loc, y_loc, w_loc, valid_loc):
         leaves = _route_sharded(forest, xb_loc, feature_axis=feature_axis)
@@ -783,19 +932,55 @@ def oob_accuracy_streamed_sharded(
     ))
 
     k = w_np.shape[0]
-    correct = jnp.zeros((k,), jnp.float32)
-    total = jnp.zeros((k,), jnp.float32)
-    for i, xb_b in enumerate(feeder.sweep()):
-        o0, o1 = offsets[i], offsets[i + 1]
-        valid = np.zeros(sizes[i] + pads[i], np.float32)
-        valid[:sizes[i]] = 1.0
-        c, t = fn(
-            xb_b,
-            jax.device_put(_pad_rows(y_np[o0:o1], pads[i]), row_sh),
-            jax.device_put(_pad_rows(w_np[:, o0:o1].T, pads[i]).T, kn_sh),
-            jax.device_put(valid, row_sh),
-        )
-        correct, total = correct + c, total + t
+    try:
+        if runtime is not None:
+            # Replicated count outputs fetch cleanly on every process;
+            # accumulating them host-side in f32 keeps the exact-integer
+            # sums bitwise identical to the on-device accumulation.
+            correct = np.zeros((k,), np.float32)
+            total = np.zeros((k,), np.float32)
+            for i, xb_b in zip(feeder.live_blocks, feeder.sweep()):
+                o0, m = offsets[i], ms[i]
+                lo, hi = runtime.local_row_range(m)
+                nreal = max(min(hi, sizes[i]) - lo, 0)
+                yb = np.zeros((hi - lo,), y_np.dtype)
+                yb[:nreal] = y_np[o0 + lo:o0 + lo + nreal]
+                wb = np.zeros((k, hi - lo), np.float32)
+                wb[:, :nreal] = w_np[:, o0 + lo:o0 + lo + nreal]
+                valid = np.zeros(hi - lo, np.float32)
+                valid[:nreal] = 1.0
+                if invalid_masks and i in invalid_masks:
+                    valid[np.asarray(invalid_masks[i], bool)] = 0.0
+                c, t = fn(
+                    xb_b,
+                    runtime.put(yb, (m,), P(sample_axes), box=[(lo, hi)]),
+                    runtime.put(wb, (k, m), P(None, sample_axes),
+                                box=[(0, k), (lo, hi)]),
+                    runtime.put(valid, (m,), P(sample_axes),
+                                box=[(lo, hi)]),
+                )
+                correct = correct + np.asarray(jax.device_get(c))
+                total = total + np.asarray(jax.device_get(t))
+            return jnp.asarray(np.where(
+                total > 0, correct / np.maximum(total, np.float32(1.0)),
+                np.float32(0.5),
+            ).astype(np.float32))
+
+        correct = jnp.zeros((k,), jnp.float32)
+        total = jnp.zeros((k,), jnp.float32)
+        for i, xb_b in zip(feeder.live_blocks, feeder.sweep()):
+            o0, o1 = offsets[i], offsets[i + 1]
+            valid = np.zeros(sizes[i] + pads[i], np.float32)
+            valid[:sizes[i]] = 1.0
+            c, t = fn(
+                xb_b,
+                jax.device_put(_pad_rows(y_np[o0:o1], pads[i]), row_sh),
+                jax.device_put(_pad_rows(w_np[:, o0:o1].T, pads[i]).T, kn_sh),
+                jax.device_put(valid, row_sh),
+            )
+            correct, total = correct + c, total + t
+    finally:
+        feeder.close()
     return jnp.where(total > 0, correct / jnp.maximum(total, 1.0), 0.5)
 
 
@@ -808,6 +993,7 @@ def predict_streamed_sharded(
     sample_axes: Sequence[str] = ("data",),
     feature_axis: str = "model",
     prefetch: int = 2,
+    feeder_opts: Optional[dict] = None,
 ) -> np.ndarray:
     """Distributed Eq. (10) prediction over host sample blocks — labels
     are per-sample, so the blocked sweep is bit-identical to
@@ -825,7 +1011,7 @@ def predict_streamed_sharded(
     x_sh = NamedSharding(mesh, P(sample_axes, feature_axis))
     feeder = BlockFeeder(
         [_pad_rows(np.asarray(b), p) for b, p in zip(blocks, pads)],
-        placement=x_sh, prefetch=prefetch,
+        placement=x_sh, prefetch=prefetch, **(feeder_opts or {}),
     )
     fn = jax.jit(_shard_map(
         partial(_vote_labels_kernel, forest, feature_axis=feature_axis),
@@ -833,9 +1019,13 @@ def predict_streamed_sharded(
         in_specs=(P(sample_axes, feature_axis),),
         out_specs=P(sample_axes),
     ))
-    out = [
-        np.asarray(fn(xb_b))[:sizes[i]] for i, xb_b in enumerate(feeder.sweep())
-    ]
+    try:
+        out = [
+            np.asarray(fn(xb_b))[:sizes[i]]
+            for i, xb_b in enumerate(feeder.sweep())
+        ]
+    finally:
+        feeder.close()
     return np.concatenate(out)
 
 
@@ -1024,6 +1214,7 @@ def fit_bins_sharded(
     sample_axes: Sequence[str] = ("data",),
     max_size: Optional[int] = None,
     exclude_masks=None,
+    runtime=None,
 ) -> np.ndarray:
     """Distributed bin-edge fitting: one quantile sketch per data shard,
     exchanged through the collective plane, merged host-side.
@@ -1042,11 +1233,19 @@ def fit_bins_sharded(
     (and therefore to the resident ``fit_bins`` at that scale). Wire
     cost: ``D * F * 2 * max_size * 16`` bytes on the gather.
 
-    ``exclude_masks`` (sequence or dict keyed by global block index)
-    carries the validator's imputed-cell masks, exactly as in
-    ``fit_bins_blocked``. Per-shard sample counts and compression flags
-    are host-side bookkeeping only — edges depend solely on the gathered
-    summaries.
+    ``exclude_masks`` (sequence, dict keyed by global block index, or a
+    callable ``exclude_masks(i) -> mask | None`` for masks a multi-host
+    caller recomputes lazily) carries the validator's imputed-cell
+    masks, exactly as in ``fit_bins_blocked``.
+
+    With ``runtime`` (``launch.multiproc.MultiHostMesh``) each process
+    sketches only the block subsets of its own device shards — the
+    block partition over shards is identical to the single-process
+    call, so a memmap source pages in only the owning host's blocks —
+    and the per-feature counts/compression/dtype metadata ride the
+    payload's extra row so every host can reconstruct every shard's
+    state from the gather alone. The merged edges are bitwise identical
+    either way.
     """
     from ..data.pipeline import stream_blocks
     from .binning import (
@@ -1063,13 +1262,19 @@ def fit_bins_sharded(
     for a in axes:
         n_shards *= int(mesh.shape[a])
     parts = np.array_split(np.arange(len(blocks)), n_shards)
+    mine = (
+        range(runtime.shard_lo, runtime.shard_hi) if runtime is not None
+        else range(n_shards)
+    )
 
     # Summaries never exceed 2 * max_size points (the sketch recompresses
-    # past that), so every shard ships the same fixed-width payload.
+    # past that), so every shard ships the same fixed-width payload. One
+    # extra metadata row per feature carries [count_lo, count_hi,
+    # compressed, dtype_char] so remote shards' states reconstruct from
+    # the gather alone.
     width = 2 * max_size
-    payloads = np.zeros((n_shards, n_features, width, 4), np.uint32)
-    states = []
-    for d in range(n_shards):
+    payloads = np.zeros((len(mine), n_features, width + 1, 4), np.uint32)
+    for row, d in enumerate(mine):
         sk = StreamingQuantileSketch(n_features, max_size=max_size)
         for i in parts[d]:
             i = int(i)
@@ -1077,6 +1282,8 @@ def fit_bins_sharded(
                 mask = None
             elif isinstance(exclude_masks, dict):
                 mask = exclude_masks.get(i)
+            elif callable(exclude_masks):
+                mask = exclude_masks(i)
             else:
                 mask = exclude_masks[i]
             sk.update(np.asarray(blocks[i]), exclude=mask)
@@ -1084,28 +1291,413 @@ def fit_bins_sharded(
         packed = np.ascontiguousarray(
             np.stack([st["values"], st["weights"]], axis=-1)
         )  # [F, width, 2] float64
-        payloads[d] = packed.view(np.uint32).reshape(n_features, width, 4)
-        states.append(st)
+        payloads[row, :, :width] = packed.view(np.uint32).reshape(
+            n_features, width, 4
+        )
+        cnt = np.asarray(st["count"], np.uint64)
+        payloads[row, :, width, 0] = (cnt & np.uint64(0xFFFFFFFF)).astype(
+            np.uint32
+        )
+        payloads[row, :, width, 1] = (cnt >> np.uint64(32)).astype(np.uint32)
+        payloads[row, :, width, 2] = np.asarray(st["compressed"], np.uint32)
+        payloads[row, :, width, 3] = np.uint32(
+            ord(np.dtype(st["value_dtype"]).char)
+        )
 
     def _exchange(p_loc):
-        g = p_loc  # [1, F, width, 4] per shard
+        g = p_loc  # [1, F, width + 1, 4] per shard
         for a in reversed(axes):
             g = jax.lax.all_gather(g, a, axis=0, tiled=True)
         return g
 
+    gshape = (n_shards, n_features, width + 1, 4)
+    p_dev = (
+        runtime.put(
+            payloads, gshape, P(axes),
+            box=[(runtime.shard_lo, runtime.shard_hi)]
+            + [(0, s) for s in gshape[1:]],
+        )
+        if runtime is not None else jnp.asarray(payloads)
+    )
     gathered = jax.jit(_shard_map(
         _exchange, mesh=mesh,
         in_specs=(P(axes),),
         out_specs=P(),
-    ))(jnp.asarray(payloads))
+    ))(p_dev)
     gathered = np.ascontiguousarray(np.asarray(jax.device_get(gathered)))
 
     merged = None
     for d in range(n_shards):
-        unpacked = gathered[d].view(np.float64).reshape(n_features, width, 2)
-        st = dict(states[d])
-        st["values"] = unpacked[..., 0]
-        st["weights"] = unpacked[..., 1]
+        meta = gathered[d, :, width]
+        unpacked = np.ascontiguousarray(gathered[d, :, :width]).view(
+            np.float64
+        ).reshape(n_features, width, 2)
+        st = {
+            "values": unpacked[..., 0],
+            "weights": unpacked[..., 1],
+            "count": (
+                meta[:, 0].astype(np.uint64)
+                | (meta[:, 1].astype(np.uint64) << np.uint64(32))
+            ).astype(np.int64),
+            "compressed": meta[:, 2].astype(np.bool_),
+            "value_dtype": np.dtype(chr(int(meta[0, 3]))).str,
+            "max_size": max_size,
+        }
         sk_d = StreamingQuantileSketch.from_state(st)
         merged = sk_d if merged is None else merged.merge(sk_d)
     return merged.edges(n_bins)
+
+
+# ---------------------------------------------------------------------------
+# Multi-process training plane (launch.multiproc runtime)
+# ---------------------------------------------------------------------------
+
+
+def _dimred_streamed_multiproc(
+    local_blocks, y_np, w_np, config, rng, runtime, *,
+    sizes, quarantined=(), prefetch=2, feeder_opts=None,
+    sample_axes=("data",), feature_axis="model",
+):
+    """``dimension_reduction_streamed`` on the multi-process plane.
+
+    Each process folds only its local rows of every block into a
+    ``[D, k, 1, F, B, C]`` histogram carry (same ``hist_spec`` layout as
+    the growth driver); the final kernel psums across the sample shards
+    — exact-integer DSI counts, so the accumulated root histogram, the
+    gain ratios, and therefore the ``select_features`` mask are bitwise
+    identical to the single-host sweep. The mask comes back replicated
+    and is re-derived host-locally on every process.
+    """
+    from ..data.pipeline import BlockFeeder
+    from .dimred import select_features
+
+    sample_axes = tuple(sample_axes)
+    mesh = runtime.mesh
+    D = runtime.n_data_shards
+    F = local_blocks[0].shape[1]
+    cfg = config.resolved(F)
+    k = w_np.shape[0]
+    B, C = cfg.n_bins, cfg.n_classes
+    offsets = np.concatenate([[0], np.cumsum(sizes)])
+    pads = [(-n) % D for n in sizes]
+    ms = [n + p for n, p in zip(sizes, pads)]
+    hist_spec = P(sample_axes, None, None, feature_axis)
+
+    feeder = BlockFeeder(
+        local_blocks,
+        placement=runtime.block_placement(
+            ms, F, P(sample_axes, feature_axis)
+        ),
+        prefetch=prefetch, quarantined=quarantined, **(feeder_opts or {}),
+    )
+
+    def acc_kernel(hist_part, xb_loc, base_loc, w_loc):
+        slot0 = jnp.zeros_like(w_loc, dtype=jnp.int32)
+        h = hist_part[0] + level_histograms(
+            xb_loc, base_loc, w_loc, slot0, n_slots=1, n_bins=B,
+            backend=cfg.hist_backend,
+        )
+        return h[None]
+
+    acc = jax.jit(_shard_map(
+        acc_kernel, mesh=mesh,
+        in_specs=(hist_spec, P(sample_axes, feature_axis), P(sample_axes),
+                  P(None, sample_axes)),
+        out_specs=hist_spec,
+    ))
+
+    def final_kernel(hist_part):
+        h = jax.lax.psum(hist_part[0], sample_axes)      # [k, 1, Fl, B, C]
+        gr = multiway_gain_ratio(h[:, 0])                # [k, Fl]
+        return jax.lax.all_gather(gr, feature_axis, axis=1, tiled=True)
+
+    final = jax.jit(_shard_map(
+        final_kernel, mesh=mesh, in_specs=(hist_spec,), out_specs=P(),
+    ))
+
+    hist = runtime.zeros((D, k, 1, F, B, C), hist_spec, jnp.float32)
+    try:
+        for i, xb_b in zip(feeder.live_blocks, feeder.sweep()):
+            o0, m = offsets[i], ms[i]
+            lo, hi = runtime.local_row_range(m)
+            nreal = max(min(hi, sizes[i]) - lo, 0)
+            yb = np.zeros((hi - lo,), y_np.dtype)
+            yb[:nreal] = y_np[o0 + lo:o0 + lo + nreal]
+            ch = np.asarray(class_channels(jnp.asarray(yb), C))
+            wb = np.zeros((k, hi - lo), np.float32)
+            wb[:, :nreal] = w_np[:, o0 + lo:o0 + lo + nreal]
+            hist = acc(
+                hist, xb_b,
+                runtime.put(ch, (m, C), P(sample_axes),
+                            box=[(lo, hi), (0, C)]),
+                runtime.put(wb, (k, m), P(None, sample_axes),
+                            box=[(0, k), (lo, hi)]),
+            )
+    finally:
+        feeder.close()
+    gr = jnp.asarray(np.asarray(jax.device_get(final(hist))))
+    return np.asarray(select_features(
+        gr, rng, n_selected=cfg.n_selected, n_important=cfg.n_important
+    ))
+
+
+def train_prf_multiproc(
+    x, y, config: ForestConfig, seed: int = 0, *,
+    runtime=None,
+    checkpoint_dir: Optional[str] = None,
+    checkpoint_every: int = 1,
+    checkpoint_keep: int = 3,
+    resume_from: Optional[str] = None,
+    on_level=None,
+    feeder_opts: Optional[dict] = None,
+    bad_block_policy: Optional[str] = "raise",
+    sample_axes: Sequence[str] = ("data",),
+    feature_axis: str = "model",
+    sketch_max_size: Optional[int] = None,
+):
+    """End-to-end ``train_prf`` across ``jax.distributed`` processes.
+
+    The whole pipeline — integrity screen, bin-edge fitting, binning,
+    DSI bootstrap, dimension reduction, growth, OOB weighting — runs
+    with every process touching only the rows its sample-axis shards
+    own (``x`` is typically an ``np.memmap``; remote rows are never
+    paged in, except that edge fitting reads the full blocks of this
+    process's shard *subset* — the same block partition as
+    ``fit_bins_sharded``). The trained model is **bitwise identical**
+    to the single-process ``train_prf`` on the same ``(x, y, config,
+    seed)``:
+
+    * the per-block validator scans local rows and union-reduces the
+      per-(block, column) bad-cell counts through one exact integer
+      ``psum_hosts``, so every process reaches the same verdict (and
+      the same typed ``DataIntegrityError`` under ``"raise"``); label
+      screening runs on the globally-resident ``y`` identically
+      everywhere;
+    * edges come from per-shard quantile sketches merged bit-exactly;
+    * the bootstrap/feature-mask PRNG draws are process-independent
+      functions of ``seed``;
+    * growth/dimred/OOB accumulate exact integer-valued f32 sums, so
+      shard-order never matters.
+
+    ``checkpoint_dir``/``resume_from`` go through the multi-process
+    checkpoint protocol (process-0 manifest, per-host shard leaves);
+    resuming under a different process count raises
+    ``CheckpointTopologyError``. Regression with ``weighted_voting``
+    is not wired on this plane yet and raises ``NotImplementedError``.
+    ``sketch_max_size`` caps the per-shard quantile summary (wire and
+    host cost of edge fitting scale with it; below the compression
+    threshold edges are exact).
+    """
+    from ..data.pipeline import (
+        BlockIssue, BlockValidator, DataIntegrityError, QuarantineReport,
+    )
+    from ..launch.multiproc import MultiHostMesh, MultiprocCheckpointManager
+    from .api import PRFModel
+    from .binning import apply_bins
+    from .dimred import random_feature_mask
+
+    config = config.resolved(x.shape[1])
+    if config.sample_block <= 0:
+        raise ValueError(
+            "train_prf_multiproc needs config.sample_block > 0 — the "
+            "multi-process plane is streaming-only (each process feeds "
+            "its local rows of every sample block)"
+        )
+    if getattr(x, "ndim", None) != 2:
+        raise ValueError(
+            "train_prf_multiproc needs a 2-D [N, F] array-like source "
+            "(np.memmap / np.ndarray) so every process can slice its own "
+            f"rows; got {type(x).__name__}"
+        )
+    if runtime is None:
+        runtime = MultiHostMesh(
+            sample_axes=sample_axes, feature_axis=feature_axis
+        )
+    mesh = runtime.mesh
+    sample_axes = tuple(sample_axes)
+    D = runtime.n_data_shards
+    N, F = int(x.shape[0]), int(x.shape[1])
+    nb = config.sample_block
+    sizes = [min(nb, N - o) for o in range(0, N, nb)]
+    offsets = np.concatenate([[0], np.cumsum(sizes)])
+    n_blocks = len(sizes)
+    ms = [n + ((-n) % D) for n in sizes]
+    windows = [runtime.local_row_range(m) for m in ms]
+    y_host = np.asarray(y)
+
+    def _local_view(i):
+        """(view of x's local real rows of block i, their count)."""
+        lo, hi = windows[i]
+        o0 = offsets[i]
+        nreal = max(min(hi, sizes[i]) - lo, 0)
+        return x[o0 + lo:o0 + lo + nreal], nreal
+
+    # ---- integrity screen (union-reduced across processes) ------------
+    report = None
+    cell_cols = None
+    label_masks = {}
+    quar = frozenset()
+    if bad_block_policy not in (None, "off"):
+        validator = BlockValidator(
+            bad_block_policy, n_features=F,
+            n_classes=None if config.regression else config.n_classes,
+            regression=config.regression,
+        )
+        counts = np.zeros((n_blocks, F), np.int64)
+        if np.issubdtype(np.asarray(x[:0]).dtype, np.inexact):
+            for i in range(n_blocks):
+                view, nreal = _local_view(i)
+                if nreal:
+                    counts[i] = (~np.isfinite(np.asarray(view))).sum(axis=0)
+        cell_cols = runtime.psum_hosts(counts.ravel()).reshape(n_blocks, F)
+        for i in range(n_blocks):
+            lm = validator._label_mask(y_host[offsets[i]:offsets[i + 1]])
+            if lm.any():
+                label_masks[i] = lm
+        report = QuarantineReport(
+            policy=bad_block_policy, blocks_checked=n_blocks,
+        )
+        for i in range(n_blocks):
+            bad_cells = int(cell_cols[i].sum())
+            bad_labels = int(label_masks[i].sum()) if i in label_masks else 0
+            if not bad_cells and not bad_labels:
+                continue
+            issue = BlockIssue(
+                index=i, reason="nonfinite" if bad_cells else "label",
+                columns=tuple(int(c) for c in np.flatnonzero(cell_cols[i])),
+                bad_cells=bad_cells, bad_labels=bad_labels,
+            )
+            report.issues.append(issue)
+            if bad_block_policy == "raise":
+                raise DataIntegrityError(
+                    issue.describe(), block_index=i,
+                    columns=issue.columns, reason=issue.reason,
+                )
+            report.sanitized_cells += bad_cells
+            report.sanitized_labels += bad_labels
+            if bad_block_policy == "quarantine":
+                report.quarantined.append(i)
+        quar = frozenset(report.quarantined)
+        if len(quar) == n_blocks:
+            raise DataIntegrityError(
+                f"every block quarantined ({n_blocks} of {n_blocks}) — "
+                "nothing left to train on",
+                reason="quarantine",
+            )
+        if label_masks:
+            y_host = y_host.copy()
+            for i, lm in label_masks.items():
+                y_host[offsets[i]:offsets[i + 1]][lm] = 0
+    good = [i for i in range(n_blocks) if i not in quar]
+    flagged = (
+        set() if cell_cols is None
+        else {i for i in range(n_blocks) if cell_cols[i].any()}
+    )
+
+    # ---- bin edges (per-shard sketches over the good blocks) ----------
+    good_views = [x[offsets[i]:offsets[i + 1]] for i in good]
+
+    def _exclude(j):
+        # Lazily recompute the imputed-cell mask of the j-th good block —
+        # only the sketching shard ever pages the full block in.
+        i = good[j]
+        if i not in flagged:
+            return None
+        return ~np.isfinite(np.asarray(good_views[j]))
+
+    edges = fit_bins_sharded(
+        good_views, config.n_bins, mesh,
+        sample_block=nb, sample_axes=sample_axes,
+        max_size=sketch_max_size,
+        exclude_masks=_exclude if flagged else None,
+        runtime=runtime,
+    )
+    edges_dev = jnp.asarray(edges)
+
+    # ---- bin the local rows of every block ----------------------------
+    xb_local = []
+    for i in range(n_blocks):
+        lo, hi = windows[i]
+        xbl = np.zeros((hi - lo, F), np.uint8)
+        if i in quar:
+            xb_local.append(xbl)             # placeholder, never swept
+            continue
+        view, nreal = _local_view(i)
+        if nreal:
+            xb = np.array(apply_bins(jnp.asarray(np.asarray(view)),
+                                     edges_dev))
+            if i in flagged:
+                # apply_bins is element-wise, so binning the local row
+                # slice matches the full-block binning bitwise; imputed
+                # cells are forced to bin 0 exactly like the single-host
+                # trainer.
+                xb[~np.isfinite(np.asarray(view))] = 0
+            xbl[:nreal] = xb
+        xb_local.append(xbl)
+
+    # ---- DSI bootstrap + feature selection (same PRNG everywhere) -----
+    key = jax.random.PRNGKey(seed)
+    k_boot, k_dim = jax.random.split(key)
+    w_np = np.asarray(bootstrap_counts(k_boot, config.n_trees, N))
+    if label_masks:
+        bad_rows = np.zeros(N, dtype=bool)
+        for i, lm in label_masks.items():
+            bad_rows[offsets[i]:offsets[i + 1]][lm] = True
+        w_np = np.where(bad_rows[None, :], 0, w_np)
+
+    feature_mask = None
+    if config.feature_mode == "importance" and not config.regression:
+        feature_mask = _dimred_streamed_multiproc(
+            xb_local, y_host, w_np, config, k_dim, runtime,
+            sizes=sizes, quarantined=sorted(quar), feeder_opts=feeder_opts,
+            sample_axes=sample_axes, feature_axis=feature_axis,
+        )
+    elif config.feature_mode == "random":
+        feature_mask = np.asarray(random_feature_mask(
+            k_dim, n_trees=config.n_trees, n_features=F,
+            n_selected=config.n_selected,
+        ))
+
+    # ---- growth (the runtime-threaded mesh streamed driver) -----------
+    manager = None
+    if checkpoint_dir is not None:
+        manager = MultiprocCheckpointManager(
+            checkpoint_dir, keep=checkpoint_keep,
+            save_interval=checkpoint_every, runtime=runtime,
+        )
+    y_grow = y_host if not config.regression else y_host.astype(np.float32)
+    forest = grow_forest_streamed_sharded(
+        xb_local, y_grow, w_np, config, mesh, feature_mask,
+        sample_axes=sample_axes, feature_axis=feature_axis,
+        manager=manager, resume_from=resume_from, on_level=on_level,
+        feeder_opts=feeder_opts, quarantined=sorted(quar),
+        runtime=runtime, block_sizes=sizes,
+    )
+
+    if config.weighted_voting:
+        if config.regression:
+            raise NotImplementedError(
+                "weighted_voting for regression (OOB R^2) is not wired "
+                "on the multi-process plane yet — set "
+                "weighted_voting=False, or train single-process"
+            )
+        invalid = {}
+        for i, lm in label_masks.items():
+            if i in quar:
+                continue
+            lo, hi = windows[i]
+            nreal = max(min(hi, sizes[i]) - lo, 0)
+            m = np.zeros(hi - lo, bool)
+            m[:nreal] = lm[lo:lo + nreal]
+            if m.any():
+                invalid[i] = m
+        w = oob_accuracy_streamed_sharded(
+            forest, xb_local, y_host, w_np, mesh,
+            sample_axes=sample_axes, feature_axis=feature_axis,
+            feeder_opts=feeder_opts, quarantined=sorted(quar),
+            runtime=runtime, block_sizes=sizes,
+            invalid_masks=invalid or None,
+        )
+        forest = dataclasses.replace(forest, tree_weight=w)
+
+    return PRFModel(forest=forest, bin_edges=edges, quarantine=report)

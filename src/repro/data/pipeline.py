@@ -22,7 +22,8 @@ import numpy as np
 
 
 def sample_blocks(
-    x: Union[np.ndarray, Sequence[np.ndarray]], block_rows: int = 0
+    x: Union[np.ndarray, Sequence[np.ndarray]], block_rows: int = 0,
+    row_range: Optional[Tuple[int, int]] = None,
 ) -> List[np.ndarray]:
     """Zero-copy ``[Nb, F]`` row views over a host array / ``np.memmap``.
 
@@ -35,12 +36,35 @@ def sample_blocks(
     (e.g. nested lists) are materialized, once, here — so callers can
     stream from any host source that yields row blocks.
     ``block_rows <= 0`` means one block (the degenerate resident feed).
+
+    ``row_range=(lo, hi)`` restricts each block to its intersection with
+    the **global** row interval ``[lo, hi)`` — the shard-aware feed of
+    the multi-process plane (``launch.multiproc.MultiHostMesh``): block
+    boundaries stay where a single-process sweep would put them, but
+    each process's views cover only its own rows of the memmap, so only
+    those pages are ever read. Blocks that fall entirely outside the
+    range become empty ``[0, F]`` views (block indexing stays global).
     """
     if isinstance(x, (list, tuple)):
-        return [b if isinstance(b, np.ndarray) else np.asarray(b) for b in x]
+        blocks = [b if isinstance(b, np.ndarray) else np.asarray(b) for b in x]
+        if row_range is None:
+            return blocks
+        lo, hi = row_range
+        out, off = [], 0
+        for b in blocks:
+            b0, b1 = off, off + b.shape[0]
+            out.append(b[max(lo - b0, 0):max(min(hi, b1) - b0, 0)])
+            off = b1
+        return out
     src = np.asarray(x)
     nb = block_rows if block_rows > 0 else src.shape[0]
-    return [src[i:i + nb] for i in range(0, src.shape[0], nb)]
+    if row_range is None:
+        return [src[i:i + nb] for i in range(0, src.shape[0], nb)]
+    lo, hi = row_range
+    return [
+        src[min(max(lo, i), i + nb):min(max(hi, i), i + nb)]
+        for i in range(0, src.shape[0], nb)
+    ]
 
 
 def stream_blocks(
@@ -387,7 +411,7 @@ class _Sweep:
                 if self._cancel.is_set():
                     return
                 b = self._feeder.blocks[i]
-                if not self._put_item(self._feeder._put(b, f"block[{i}]")):
+                if not self._put_item(self._feeder._put(b, f"block[{i}]", i)):
                     return
             self._put_item(self._stop)
         except BaseException as e:  # re-raised on the consumer side
@@ -428,10 +452,16 @@ class _Sweep:
         self._thread.join(timeout=self._feeder.join_timeout)
         self._feeder._sweeps.discard(self)
         if self._thread.is_alive():
+            try:
+                import jax
+
+                proc = int(jax.process_index())
+            except Exception:
+                proc = 0
             raise FeedError(
-                f"feeder thread {self._thread.name!r} failed to stop within "
-                f"{self._feeder.join_timeout}s — a transfer is wedged at "
-                f"site {self._feeder._last_site!r}"
+                f"feeder thread {self._thread.name!r} on process {proc} "
+                f"failed to stop within {self._feeder.join_timeout}s — a "
+                f"transfer is wedged at site {self._feeder._last_site!r}"
             )
 
     def __enter__(self) -> "_Sweep":
@@ -549,7 +579,7 @@ class BlockFeeder:
     def __len__(self) -> int:
         return len(self.blocks)
 
-    def _put(self, host_array, site: str):
+    def _put(self, host_array, site: str, index: Optional[int] = None):
         """One host->device transfer under the bounded retry policy."""
         import jax
 
@@ -559,6 +589,11 @@ class BlockFeeder:
             try:
                 if self.fault_hook is not None:
                     self.fault_hook(site)
+                if callable(self.placement):
+                    # Multi-process placement: a callback building the
+                    # global device array from this process's host-local
+                    # rows (needs the block index for its row offset).
+                    return self.placement(host_array, index)
                 if self.placement is None:
                     return jax.device_put(host_array)
                 return jax.device_put(host_array, self.placement)
@@ -589,7 +624,7 @@ class BlockFeeder:
         if self.prefetch <= 0:
             def sync():
                 for i in self.live_blocks:
-                    yield self._put(self.blocks[i], f"block[{i}]")
+                    yield self._put(self.blocks[i], f"block[{i}]", i)
             return sync()
         s = _Sweep(self)
         self._sweeps.add(s)
